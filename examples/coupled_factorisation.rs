@@ -1,0 +1,95 @@
+//! Coupled matrix factorisation — the extension the paper's conclusion
+//! proposes: two observed matrices share the dictionary W (e.g. the
+//! same notes heard in two different recordings, or ratings + item
+//! content). The coupled PSGLD sampler updates W from both likelihoods
+//! while keeping the B-way block parallelism.
+//!
+//! ```sh
+//! cargo run --release --example coupled_factorisation
+//! ```
+//!
+//! Demonstrates the benefit: when V1 is scarce (few columns), coupling
+//! to a richer V2 sharpens the dictionary and the V1 reconstruction.
+
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::linalg::Mat;
+use psgld::metrics::{gelman_rubin, rmse_dense};
+use psgld::model::NmfModel;
+use psgld::rng::{Dist, Rng};
+use psgld::samplers::{CoupledPsgld, Psgld, Sampler};
+
+fn main() -> psgld::Result<()> {
+    let (i, j1, j2, k) = (48usize, 8usize, 96usize, 4usize);
+    let mut rng = Rng::seed_from(11);
+    let w_true = Mat::exponential(i, k, 1.0, &mut rng);
+    let h1 = Mat::exponential(k, j1, 1.0, &mut rng);
+    let h2 = Mat::exponential(k, j2, 1.0, &mut rng);
+    let mu1 = w_true.matmul_abs(&h1)?;
+    let mu2 = w_true.matmul_abs(&h2)?;
+    let v1 = Mat::from_fn(i, j1, |r, c| rng.poisson(mu1.get(r, c) as f64) as f32);
+    let v2 = Mat::from_fn(i, j2, |r, c| rng.poisson(mu2.get(r, c) as f64) as f32);
+    println!(
+        "shared dictionary, two observations: V1 {i}x{j1} (scarce), V2 {i}x{j2} (rich)"
+    );
+
+    let model = NmfModel::poisson(k);
+    let t = 1_500u64;
+    let run = RunConfig::quick(t)
+        .with_step(StepSchedule::Polynomial { a: 0.002, b: 0.51 });
+
+    // --- coupled: W informed by both matrices --------------------------
+    let mut coupled = CoupledPsgld::new(&v1, &v2, &model, 4, run.clone(), 3)?;
+    for it in 1..=t {
+        coupled.step(it);
+    }
+    let cs = coupled.coupled_state();
+    let rec_coupled = rmse_dense(&cs.w, &cs.ht1.transpose(), &mu1);
+
+    // --- solo: V1 only --------------------------------------------------
+    let mut solo = Psgld::new(&v1, &model, 4, run.clone(), 3);
+    for it in 1..=t {
+        solo.step(it);
+    }
+    let rec_solo = rmse_dense(&solo.state().w, &solo.state().h(), &mu1);
+
+    println!("\nreconstruction error of the noiseless mu1 (lower is better):");
+    println!("  coupled (V1 + V2): {rec_coupled:.3}");
+    println!("  solo (V1 only)   : {rec_solo:.3}");
+    println!(
+        "  coupling {}",
+        if rec_coupled < rec_solo {
+            "wins — the shared W borrows strength from V2"
+        } else {
+            "ties — V1 alone was already informative at this size"
+        }
+    );
+
+    // --- multi-chain R-hat over the coupled sampler --------------------
+    let chains: Vec<Vec<f64>> = (0..3)
+        .map(|c| {
+            let mut s = CoupledPsgld::new(&v1, &v2, &model, 4, run.clone(), 50 + c).unwrap();
+            let mut vals = Vec::new();
+            for it in 1..=t {
+                s.step(it);
+                if it > t / 2 && it % 5 == 0 {
+                    let st = s.coupled_state();
+                    vals.push(
+                        st.w
+                            .matmul_abs(&st.ht1.transpose())
+                            .unwrap()
+                            .as_slice()
+                            .iter()
+                            .map(|&x| x as f64)
+                            .sum::<f64>(),
+                    );
+                }
+            }
+            vals
+        })
+        .collect();
+    println!(
+        "\nGelman-Rubin R-hat over 3 coupled chains: {:.3} (near 1 = converged)",
+        gelman_rubin(&chains)
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! End-to-end distributed driver (the mandated e2e validation run):
+//! Bayesian matrix factorisation of a MovieLens-scale sparse ratings
+//! matrix on the simulated cluster — the full stack in one binary:
+//!
+//!   data generator -> B x B sparse partitioning -> distributed PSGLD
+//!   (ring of Fig. 4, virtual-time cost model) -> RMSE curve + posterior
+//!   summary, with the DSGD optimisation baseline side by side.
+//!
+//! ```sh
+//! cargo run --release --example movielens_distributed [-- --scale 0.08]
+//! ```
+//!
+//! The measured RMSE curve and timing land in EXPERIMENTS.md.
+
+use psgld::cluster::{psgld_distributed_full, ComputeModel, NetworkModel};
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::data::movielens;
+use psgld::metrics::rmse_sparse;
+use psgld::model::NmfModel;
+use psgld::samplers::{run_sampler, Dsgd};
+
+fn main() -> psgld::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let scale = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.08);
+
+    let (k, b, t) = (50usize, 15usize, 300u64);
+    let csr = movielens::movielens_like(scale, k, 99);
+    println!(
+        "ratings matrix: {} movies x {} users, {} ratings ({:.2}% dense), mean {:.2}",
+        csr.rows(),
+        csr.cols(),
+        csr.nnz(),
+        100.0 * csr.nnz() as f64 / (csr.rows() as f64 * csr.cols() as f64),
+        csr.mean()
+    );
+
+    // match the prior scale to the ratings: E[mu] = K/(lam^2) = mean(V)
+    let lam = (k as f64 / csr.mean()).sqrt() as f32;
+    let model = NmfModel::poisson(k).with_priors(lam, lam);
+    let run = RunConfig::quick(t)
+        .with_step(StepSchedule::Polynomial { a: 1e-3, b: 0.51 })
+        .with_monitor_every(t / 15);
+
+    // --- distributed PSGLD on the simulated 15-node cluster -----------
+    let net = NetworkModel::paper_cluster();
+    let compute = ComputeModel::paper_node();
+    println!("\ndistributed PSGLD (B = {b} simulated nodes, ring H-rotation):");
+    let rep = psgld_distributed_full(&csr, &model, b, &run, 7, &net, &compute, |s| {
+        rmse_sparse(&s.w, &s.h(), &csr)
+    })?;
+    let trace = rep.trace.as_ref().expect("full fidelity");
+    for (it, (sec, rmse)) in trace
+        .iters
+        .iter()
+        .zip(trace.seconds.iter().zip(&trace.values))
+    {
+        println!("  iter {it:>4}  vclock {sec:>8.2}s  RMSE {rmse:.4}");
+    }
+    println!(
+        "  virtual time {:.1}s = {:.1}s compute + {:.2}s communication",
+        rep.virtual_seconds, rep.compute_seconds, rep.comm_seconds
+    );
+
+    // --- DSGD baseline (same partitioning, no Langevin noise) ---------
+    println!("\nDSGD baseline (same grid, shared-memory):");
+    let mut dsgd = Dsgd::new_sparse(&csr, &model, b, run.clone(), 7)?;
+    let res = run_sampler(&mut dsgd, &run, |s| rmse_sparse(&s.w, &s.h(), &csr));
+    println!(
+        "  final RMSE {:.4} in {:.2}s wall",
+        res.trace.last_value(),
+        res.sampling_seconds
+    );
+
+    let final_psgld = trace.last_value();
+    let final_dsgd = res.trace.last_value();
+    println!(
+        "\nheadline: PSGLD (a full Bayesian sampler) reaches RMSE {final_psgld:.4} vs \
+         DSGD's {final_dsgd:.4};\nthe paper's point — the sampler is not \
+         meaningfully slower than the optimiser — holds when the gap is small."
+    );
+    Ok(())
+}

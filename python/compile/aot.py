@@ -1,0 +1,214 @@
+"""AOT compiler: lower the L2 model functions to HLO *text* artifacts.
+
+HLO text (NOT `.serialize()`d protos) is the interchange format: jax>=0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Run via `make artifacts`:
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Emits one .hlo.txt per (function, beta, shape) variant plus
+`manifest.json`, which the Rust runtime (rust/src/runtime/manifest.rs)
+consumes to compile and dispatch executables.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = "f32"
+U32 = "u32"
+
+
+def beta_tag(beta: float) -> str:
+    return "b" + str(float(beta)).replace(".", "p").replace("-", "m")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+SCALAR = spec((), jnp.float32)
+SEED = spec((2,), jnp.uint32)
+
+
+def io_entry(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+# --------------------------------------------------------------------------
+# Shape table — every executable the experiments need. Keyed by the
+# experiment index in DESIGN.md §5.
+# --------------------------------------------------------------------------
+
+# (beta, B, m, n, k, mirror)
+PART_UPDATES = [
+    (1.0, 4, 32, 32, 16, True),    # quickstart
+    (1.0, 8, 32, 32, 32, True),    # fig2a I=J=256
+    (1.0, 16, 32, 32, 32, True),   # fig2a I=J=512
+    (1.0, 32, 32, 32, 32, True),   # fig2a I=J=1024
+    (0.5, 32, 32, 32, 32, True),   # fig2b compound Poisson
+    (1.0, 8, 32, 32, 8, True),     # fig3 audio (256x256, K=8, B=8)
+    (2.0, 4, 32, 32, 16, True),    # ablation: Gaussian + mirroring
+    (2.0, 4, 32, 32, 16, False),   # ablation: Gaussian, no mirroring
+]
+
+# (beta, i, j, k, mirror)
+LD_UPDATES = [
+    (1.0, 128, 128, 16, True),
+    (1.0, 256, 256, 32, True),
+    (1.0, 512, 512, 32, True),
+    (1.0, 1024, 1024, 32, True),
+    (0.5, 1024, 1024, 32, True),
+    (1.0, 256, 256, 8, True),
+]
+
+# (beta, i, j, k)
+LOGLIKS = [
+    (1.0, 128, 128, 16),
+    (1.0, 256, 256, 32),
+    (1.0, 512, 512, 32),
+    (1.0, 1024, 1024, 32),
+    (0.5, 1024, 1024, 32),
+    (1.0, 256, 256, 8),
+]
+
+
+def build_entries():
+    entries = []
+    for beta, b, m, n, k, mirror in PART_UPDATES:
+        name = f"part_update_{beta_tag(beta)}_B{b}_m{m}_n{n}_k{k}" + (
+            "" if mirror else "_nomirror"
+        )
+        fn = functools.partial(model.part_update, beta=beta, mirror=mirror)
+        args = [
+            spec((b, m, k)), spec((b, k, n)), spec((b, m, n)),
+            SCALAR, SCALAR, SCALAR, SCALAR, SEED,
+        ]
+        entries.append({
+            "name": name,
+            "kind": "part_update",
+            "beta": beta, "phi": 1.0, "mirror": mirror,
+            "b": b, "m": m, "n": n, "k": k,
+            "fn": fn, "args": args,
+            "inputs": [
+                io_entry("ws", F32, (b, m, k)),
+                io_entry("hs", F32, (b, k, n)),
+                io_entry("vs", F32, (b, m, n)),
+                io_entry("eps", F32, ()),
+                io_entry("scale", F32, ()),
+                io_entry("lam_w", F32, ()),
+                io_entry("lam_h", F32, ()),
+                io_entry("seed", U32, (2,)),
+            ],
+            "outputs": [
+                io_entry("ws_next", F32, (b, m, k)),
+                io_entry("hs_next", F32, (b, k, n)),
+            ],
+        })
+    for beta, i, j, k, mirror in LD_UPDATES:
+        name = f"ld_update_{beta_tag(beta)}_i{i}_j{j}_k{k}" + (
+            "" if mirror else "_nomirror"
+        )
+        fn = functools.partial(model.ld_update, beta=beta, mirror=mirror)
+        args = [
+            spec((i, k)), spec((k, j)), spec((i, j)),
+            SCALAR, SCALAR, SCALAR, SEED,
+        ]
+        entries.append({
+            "name": name,
+            "kind": "ld_update",
+            "beta": beta, "phi": 1.0, "mirror": mirror,
+            "i": i, "j": j, "k": k,
+            "fn": fn, "args": args,
+            "inputs": [
+                io_entry("w", F32, (i, k)),
+                io_entry("h", F32, (k, j)),
+                io_entry("v", F32, (i, j)),
+                io_entry("eps", F32, ()),
+                io_entry("lam_w", F32, ()),
+                io_entry("lam_h", F32, ()),
+                io_entry("seed", U32, (2,)),
+            ],
+            "outputs": [
+                io_entry("w_next", F32, (i, k)),
+                io_entry("h_next", F32, (k, j)),
+            ],
+        })
+    for beta, i, j, k in LOGLIKS:
+        name = f"loglik_{beta_tag(beta)}_i{i}_j{j}_k{k}"
+        fn = functools.partial(model.loglik, beta=beta)
+        args = [spec((i, k)), spec((k, j)), spec((i, j))]
+        entries.append({
+            "name": name,
+            "kind": "loglik",
+            "beta": beta, "phi": 1.0, "mirror": True,
+            "i": i, "j": j, "k": k,
+            "fn": fn, "args": args,
+            "inputs": [
+                io_entry("w", F32, (i, k)),
+                io_entry("h", F32, (k, j)),
+                io_entry("v", F32, (i, j)),
+            ],
+            "outputs": [io_entry("ll", F32, ())],
+        })
+    return entries
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    entries = build_entries()
+    if args.only:
+        entries = [e for e in entries if args.only in e["name"]]
+    if args.list:
+        for e in entries:
+            print(e["name"])
+        return 0
+
+    manifest = {"version": 1, "entries": []}
+    for e in entries:
+        fname = e["name"] + ".hlo.txt"
+        path = outdir / fname
+        lowered = jax.jit(e.pop("fn")).lower(*e.pop("args"))
+        text = to_hlo_text(lowered)
+        path.write_text(text)
+        e["file"] = fname
+        e["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["entries"].append(e)
+        print(f"  {fname}  ({len(text)} chars)", file=sys.stderr)
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(entries)} artifacts + manifest.json -> {outdir}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

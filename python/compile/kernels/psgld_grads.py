@@ -1,0 +1,164 @@
+"""L1 — Pallas kernel for the PSGLD compute hot-spot.
+
+For one block (W_b, H_b, V_b) of a part, computes the sum over the block
+of the per-entry Tweedie log-likelihood gradients plus the (unnormalised)
+log-likelihood itself:
+
+    mu  = |W| @ |H|                       (MXU matmul)
+    E   = (V - mu) * mu^(beta-2) / phi    (VPU elementwise)
+    G_W = sign(W) * (E @ |H|^T)           (MXU matmul)
+    G_H = sign(H) * (|W|^T @ E)           (MXU matmul)
+    ll  = -sum(d_beta(V || mu)) / phi
+
+The kernel is tiled over (m, n) with BlockSpec; the K dimension (small:
+8..64 in every experiment) stays resident in VMEM. G_W accumulates across
+the n-tile grid axis, G_H across the m-tile axis and ll across both —
+the classic Pallas revisiting-output accumulation pattern.
+
+Hardware adaptation (paper used CUDA threadblocks + shared memory): the
+BlockSpec pipeline stages HBM->VMEM tiles with automatic double
+buffering; the three GEMMs target the MXU; the elementwise weight runs
+fused on the VPU between them. `interpret=True` always (the CPU PJRT
+plugin cannot execute Mosaic custom-calls); real-TPU efficiency is
+estimated from the VMEM footprint in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Floor for mu: beta < 2 weights divide by powers of mu.
+MU_EPS = 1e-6
+# Floor for v inside log(v/mu) when beta == 0 (Itakura-Saito needs v > 0).
+V_EPS = 1e-12
+
+
+def elementwise_weight(mu, beta):
+    """mu^(beta-2), special-cased for the betas the paper uses."""
+    if beta == 2.0:
+        return jnp.ones_like(mu)
+    if beta == 1.0:
+        return 1.0 / mu
+    if beta == 0.0:
+        return 1.0 / (mu * mu)
+    return mu ** (beta - 2.0)
+
+
+def beta_divergence(v, mu, beta):
+    """d_beta(v || mu), elementwise. Special cases beta in {0, 1, 2}."""
+    if beta == 1.0:  # generalised KL (Poisson)
+        # xlogy-safe: v * log(v/mu) - v + mu, with v=0 -> mu
+        return jnp.where(v > 0, v * jnp.log(jnp.maximum(v, V_EPS) / mu), 0.0) - v + mu
+    if beta == 0.0:  # Itakura-Saito (gamma)
+        vs = jnp.maximum(v, V_EPS)
+        return vs / mu - jnp.log(vs / mu) - 1.0
+    if beta == 2.0:  # squared Euclidean (Gaussian)
+        return 0.5 * (v - mu) ** 2
+    return (
+        jnp.maximum(v, 0.0) ** beta / (beta * (beta - 1.0))
+        - v * mu ** (beta - 1.0) / (beta - 1.0)
+        + mu**beta / beta
+    )
+
+
+def _grads_kernel(w_ref, h_ref, v_ref, gw_ref, gh_ref, ll_ref, *, beta, phi):
+    i, j = pl.program_id(0), pl.program_id(1)
+    w = w_ref[...]
+    h = h_ref[...]
+    v = v_ref[...]
+    wa = jnp.abs(w)
+    ha = jnp.abs(h)
+    mu = wa @ ha + MU_EPS
+    e = (v - mu) * elementwise_weight(mu, beta) * (1.0 / phi)
+
+    @pl.when(j == 0)
+    def _():
+        gw_ref[...] = jnp.zeros_like(gw_ref)
+
+    gw_ref[...] += jnp.sign(w) * (e @ ha.T)
+
+    @pl.when(i == 0)
+    def _():
+        gh_ref[...] = jnp.zeros_like(gh_ref)
+
+    gh_ref[...] += jnp.sign(h) * (wa.T @ e)
+
+    @pl.when((i == 0) & (j == 0))
+    def _():
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    ll_ref[...] += -jnp.sum(beta_divergence(v, mu, beta))[None, None] * (1.0 / phi)
+
+
+def pick_tile(dim, pref=128):
+    """Largest power-of-two tile <= pref that divides dim."""
+    t = min(pref, dim)
+    while dim % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "phi", "bm", "bn"))
+def psgld_grads(w, h, v, *, beta, phi=1.0, bm=None, bn=None):
+    """Blockwise-summed gradients + loglik for one (W_b, H_b, V_b) block.
+
+    Returns (G_W [m,K], G_H [K,n], ll [1,1]).
+    """
+    m, k = w.shape
+    k2, n = h.shape
+    assert k == k2 and v.shape == (m, n), (w.shape, h.shape, v.shape)
+    bm = bm or pick_tile(m)
+    bn = bn or pick_tile(n)
+    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_grads_kernel, beta=float(beta), phi=float(phi))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), w.dtype),
+            jax.ShapeDtypeStruct((k, n), h.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(w, h, v)
+
+
+def vmem_report(m, n, k, bm=None, bn=None, dtype_bytes=4):
+    """Estimated VMEM residency per grid step (for DESIGN.md §8).
+
+    With double buffering the pipeline holds 2x the input tiles plus the
+    output accumulators resident.
+    """
+    bm = bm or pick_tile(m)
+    bn = bn or pick_tile(n)
+    tiles = {
+        "w_tile": bm * k,
+        "h_tile": k * bn,
+        "v_tile": bm * bn,
+        "gw_acc": bm * k,
+        "gh_acc": k * bn,
+    }
+    in_bytes = (tiles["w_tile"] + tiles["h_tile"] + tiles["v_tile"]) * dtype_bytes
+    acc_bytes = (tiles["gw_acc"] + tiles["gh_acc"] + 1) * dtype_bytes
+    total = 2 * in_bytes + acc_bytes  # 2x: double buffering
+    flops = 3 * 2 * m * n * k  # three GEMMs over the full block
+    return {
+        "bm": bm,
+        "bn": bn,
+        "vmem_bytes": total,
+        "fits_16MiB": total < 16 * 2**20,
+        "gemm_flops_per_block": flops,
+    }

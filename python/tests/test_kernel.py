@@ -1,0 +1,145 @@
+"""L1 correctness: the Pallas gradient kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes and betas; fixed-case tests pin the exact
+experiment shapes from DESIGN.md §5.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.psgld_grads import (
+    MU_EPS,
+    beta_divergence,
+    pick_tile,
+    psgld_grads,
+    vmem_report,
+)
+from compile.kernels.ref import grads_ref
+
+BETAS = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0]
+
+
+def make_block(seed, m, n, k, beta):
+    """Generate a (W, H, V) block with V drawn near the generative model
+    so that mu is well-scaled for every beta (no pathological 1/mu^2)."""
+    key = jax.random.PRNGKey(seed)
+    kw, kh, kv = jax.random.split(key, 3)
+    w = jax.random.uniform(kw, (m, k), minval=0.1, maxval=1.0)
+    h = jax.random.uniform(kh, (k, n), minval=0.1, maxval=1.0)
+    mu = w @ h
+    if beta == 1.0:
+        v = jax.random.poisson(kv, mu).astype(jnp.float32)
+    else:
+        v = mu * jax.random.uniform(kv, mu.shape, minval=0.5, maxval=1.5)
+    return w, h, v.astype(jnp.float32)
+
+
+def assert_matches_ref(w, h, v, beta, phi=1.0, rtol=2e-4, atol=2e-4):
+    gw, gh, ll = psgld_grads(w, h, v, beta=beta, phi=phi)
+    rgw, rgh, rll = grads_ref(w, h, v, beta=beta, phi=phi)
+    np.testing.assert_allclose(gw, rgw, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(gh, rgh, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(ll, rll, rtol=rtol, atol=atol * 10)
+
+
+@pytest.mark.parametrize("beta", BETAS)
+def test_kernel_matches_ref_paper_block(beta):
+    # the 32x32 block shape used by every part_update artifact
+    w, h, v = make_block(0, 32, 32, 32, beta)
+    assert_matches_ref(w, h, v, beta)
+
+
+@pytest.mark.parametrize(
+    "m,n,k",
+    [(32, 32, 8), (32, 32, 16), (32, 32, 32), (32, 32, 50),
+     (256, 256, 8), (256, 256, 32), (128, 96, 16)],
+)
+def test_kernel_matches_ref_experiment_shapes(m, n, k):
+    w, h, v = make_block(1, m, n, k, 1.0)
+    assert_matches_ref(w, h, v, 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    k=st.integers(1, 40),
+    beta=st.sampled_from(BETAS),
+    phi=st.sampled_from([0.5, 1.0, 2.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_hypothesis(m, n, k, beta, phi, seed):
+    w, h, v = make_block(seed, m, n, k, beta)
+    assert_matches_ref(w, h, v, beta, phi)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 64), n=st.integers(1, 64), seed=st.integers(0, 99))
+def test_kernel_tiling_invariance(m, n, seed):
+    """The result must not depend on the chosen tile decomposition."""
+    w, h, v = make_block(seed, m, n, 8, 1.0)
+    full = psgld_grads(w, h, v, beta=1.0, bm=m, bn=n)
+    tiled = psgld_grads(w, h, v, beta=1.0, bm=pick_tile(m, 16), bn=pick_tile(n, 16))
+    for a, b in zip(full, tiled):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_negative_entries_sign_chain():
+    """Pre-mirroring states can be negative; d/dw |w| = sign(w)."""
+    w, h, v = make_block(3, 32, 32, 8, 1.0)
+    w = w * jnp.where(jnp.arange(32)[:, None] % 2 == 0, -1.0, 1.0)
+    h = h * jnp.where(jnp.arange(32)[None, :] % 3 == 0, -1.0, 1.0)
+    assert_matches_ref(w, h, v, 1.0)
+    # flipping the sign of W must flip the sign of G_W and leave G_H alone
+    gw, gh, ll = psgld_grads(w, h, v, beta=1.0)
+    gw2, gh2, ll2 = psgld_grads(-w, h, v, beta=1.0)
+    np.testing.assert_allclose(gw2, -gw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gh2, gh, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ll2, ll, rtol=1e-5)
+
+
+@pytest.mark.parametrize("beta", BETAS)
+def test_gradient_matches_autodiff(beta):
+    """G_W must equal the autodiff gradient of the summed loglik."""
+    w, h, v = make_block(4, 32, 16, 8, beta)
+
+    def ll(w_, h_):
+        mu = jnp.abs(w_) @ jnp.abs(h_) + MU_EPS
+        return -jnp.sum(beta_divergence(v, mu, beta))
+
+    agw = jax.grad(ll, argnums=0)(w, h)
+    agh = jax.grad(ll, argnums=1)(w, h)
+    gw, gh, _ = psgld_grads(w, h, v, beta=beta)
+    np.testing.assert_allclose(gw, agw, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(gh, agh, rtol=5e-3, atol=5e-3)
+
+
+def test_zero_data_poisson():
+    """v = 0 entries are legal for beta in [1, 2] (sparse data)."""
+    w, h, _ = make_block(5, 32, 32, 8, 1.0)
+    v = jnp.zeros((32, 32), jnp.float32)
+    gw, gh, ll = psgld_grads(w, h, v, beta=1.0)
+    assert np.all(np.isfinite(gw)) and np.all(np.isfinite(gh))
+    assert np.isfinite(ll[0, 0])
+    # with v=0 and KL, d = mu, so ll = -sum(mu)
+    mu = jnp.abs(w) @ jnp.abs(h) + MU_EPS
+    np.testing.assert_allclose(ll[0, 0], -jnp.sum(mu), rtol=1e-4)
+
+
+def test_loglik_maximised_at_truth():
+    """ll(mu*) >= ll(perturbed) for matched data (sanity of sign)."""
+    w, h, v = make_block(6, 64, 64, 16, 2.0)
+    v = w @ h  # noiseless
+    _, _, ll_true = psgld_grads(w, h, v, beta=2.0)
+    _, _, ll_pert = psgld_grads(w * 1.3, h, v, beta=2.0)
+    assert ll_true[0, 0] > ll_pert[0, 0]
+
+
+def test_vmem_report_fits():
+    """The BlockSpec used by every artifact must fit VMEM comfortably."""
+    for (m, n, k) in [(32, 32, 50), (128, 128, 64), (1024, 1024, 32)]:
+        rep = vmem_report(m, n, k)
+        assert rep["fits_16MiB"], rep

@@ -1,0 +1,49 @@
+//! Tiny shared bench harness (criterion is unavailable offline):
+//! warmup + repeated timing with mean / min / throughput reporting.
+
+use std::time::Instant;
+
+/// Time `f` over `reps` runs after `warmup` runs; returns seconds/run
+/// (minimum over runs — least-noise estimator on a busy box).
+pub fn time_it(warmup: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Report one benchmark row.
+pub fn report(name: &str, seconds: f64, work_items: Option<(f64, &str)>) {
+    match work_items {
+        Some((n, unit)) => println!(
+            "{name:<44} {:>12}   {:>14}",
+            fmt_s(seconds),
+            format!("{:.2e} {unit}/s", n / seconds)
+        ),
+        None => println!("{name:<44} {:>12}", fmt_s(seconds)),
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!("{:<44} {:>12}   {:>14}", "benchmark", "time", "throughput");
+    println!("{}", "-".repeat(76));
+}

@@ -1,0 +1,62 @@
+//! Bench for Fig. 2(a): per-iteration cost of every sampler on the
+//! Poisson-NMF synthetic workload (I = J ∈ {256, 512}, K = 32,
+//! B = I/32, |Ω| = IJ/32). The paper's wall-clock bars are the product
+//! of these per-iteration times with T = 10 000.
+//!
+//! Run: `cargo bench --bench fig2a_poisson`
+
+mod bench_util;
+use bench_util::{header, report, time_it};
+
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::data::synth;
+use psgld::model::NmfModel;
+use psgld::samplers::{GibbsPoisson, Ld, Psgld, Sampler, Sgld};
+
+fn main() {
+    header("Fig 2(a): per-iteration sampler cost (Poisson-NMF, K=32)");
+    for &i in &[256usize, 512] {
+        let model = NmfModel::poisson(32);
+        let data = synth::poisson_nmf(i, i, &model, 1);
+        let n = (i * i) as f64;
+        let run = RunConfig::quick(1_000)
+            .with_step(StepSchedule::Polynomial { a: 0.002, b: 0.51 });
+
+        let mut p = Psgld::new(&data.v, &model, i / 32, run.clone(), 2);
+        let mut t = 0u64;
+        let s = time_it(3, 10, || {
+            t += 1;
+            p.step(t);
+        });
+        report(&format!("psgld/I={i}"), s, Some((n / (i / 32) as f64, "entries")));
+
+        let mut ld = Ld::new(&data.v, &model, StepSchedule::Constant { eps: 2e-5 }, 3);
+        let mut t = 0u64;
+        let s = time_it(1, 3, || {
+            t += 1;
+            ld.step(t);
+        });
+        report(&format!("ld/I={i}"), s, Some((n, "entries")));
+
+        let mut sgld = Sgld::new(
+            &data.v, &model, i * i / 32,
+            StepSchedule::Polynomial { a: 1e-4, b: 0.51 }, 4,
+        );
+        let mut t = 0u64;
+        let s = time_it(1, 5, || {
+            t += 1;
+            sgld.step(t);
+        });
+        report(&format!("sgld/I={i} (|O|=IJ/32)"), s, Some((n / 32.0, "entries")));
+
+        let mut g = GibbsPoisson::new(&data.v, &model, 5);
+        let mut t = 0u64;
+        let s = time_it(0, 2, || {
+            t += 1;
+            g.step(t);
+        });
+        report(&format!("gibbs/I={i}"), s, Some((n, "entries")));
+        println!();
+    }
+    println!("paper claim: PSGLD 700+x faster than Gibbs, 60+x faster than LD/SGLD per T iterations.");
+}

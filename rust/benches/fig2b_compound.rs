@@ -1,0 +1,63 @@
+//! Bench for Fig. 2(b): per-iteration cost under the compound-Poisson
+//! observation model (β = 0.5) — checks that the generic-β gradient
+//! path (powf) stays within a small factor of the specialised β = 1.
+//!
+//! Run: `cargo bench --bench fig2b_compound`
+
+mod bench_util;
+use bench_util::{header, report, time_it};
+
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::data::synth;
+use psgld::model::NmfModel;
+use psgld::samplers::{Ld, Psgld, Sampler, Sgld};
+
+fn main() {
+    header("Fig 2(b): per-iteration cost, compound Poisson (beta=0.5)");
+    let i = 512usize;
+    let model = NmfModel::compound_poisson(32);
+    let data = synth::compound_poisson_nmf(i, i, &model, 1);
+    let n = (i * i) as f64;
+    let b = i / 32;
+
+    let run = RunConfig::quick(100)
+        .with_step(StepSchedule::Polynomial { a: 0.016 / b as f64, b: 0.51 });
+    let mut p = Psgld::new(&data.v, &model, b, run.clone(), 2);
+    let mut t = 0u64;
+    let s = time_it(3, 10, || {
+        t += 1;
+        p.step(t);
+    });
+    report("psgld/beta=0.5", s, Some((n / b as f64, "entries")));
+
+    // beta = 1 on the same data scale for the specialisation gap
+    let model1 = NmfModel::poisson(32);
+    let data1 = synth::poisson_nmf(i, i, &model1, 1);
+    let mut p1 = Psgld::new(&data1.v, &model1, b, run.clone(), 2);
+    let mut t = 0u64;
+    let s1 = time_it(3, 10, || {
+        t += 1;
+        p1.step(t);
+    });
+    report("psgld/beta=1 (specialised)", s1, Some((n / b as f64, "entries")));
+    println!("generic-beta overhead: {:.2}x", s / s1);
+
+    let mut ld = Ld::new(&data.v, &model, StepSchedule::Constant { eps: 2e-5 }, 3);
+    let mut t = 0u64;
+    let s = time_it(1, 3, || {
+        t += 1;
+        ld.step(t);
+    });
+    report("ld/beta=0.5", s, Some((n, "entries")));
+
+    let mut sgld = Sgld::new(
+        &data.v, &model, i * i / 32,
+        StepSchedule::Polynomial { a: 1e-4, b: 0.51 }, 4,
+    );
+    let mut t = 0u64;
+    let s = time_it(1, 5, || {
+        t += 1;
+        sgld.step(t);
+    });
+    report("sgld/beta=0.5", s, Some((n / 32.0, "entries")));
+}

@@ -1,0 +1,54 @@
+//! Bench for Fig. 3: the audio workload's per-iteration sampler costs
+//! (256×256 spectrogram, K = 8, B = 8). The paper reports 3.5 s /
+//! 81 s / 533 s for PSGLD / LD / Gibbs over 10k samples — i.e. ratios
+//! of ~23x and ~150x, which these per-iteration numbers reproduce up to
+//! hardware constants.
+//!
+//! Run: `cargo bench --bench fig3_audio`
+
+mod bench_util;
+use bench_util::{header, report, time_it};
+
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::data::audio;
+use psgld::model::NmfModel;
+use psgld::samplers::{GibbsPoisson, Ld, Psgld, Sampler};
+
+fn main() {
+    header("Fig 3: audio decomposition per-iteration cost (256x256, K=8)");
+    let data = audio::piano_spectrogram(256, 256, 1);
+    let model = NmfModel::poisson(8);
+    let n = (256 * 256) as f64;
+
+    let run = RunConfig::quick(100)
+        .with_step(StepSchedule::Polynomial { a: 5e-4, b: 0.51 });
+    let mut p = Psgld::new(&data.v, &model, 8, run.clone(), 2);
+    let mut t = 0u64;
+    let s_p = time_it(3, 20, || {
+        t += 1;
+        p.step(t);
+    });
+    report("psgld/B=8", s_p, Some((n / 8.0, "entries")));
+
+    let mut ld = Ld::new(&data.v, &model, StepSchedule::Constant { eps: 1e-5 }, 3);
+    let mut t = 0u64;
+    let s_l = time_it(1, 5, || {
+        t += 1;
+        ld.step(t);
+    });
+    report("ld", s_l, Some((n, "entries")));
+
+    let mut g = GibbsPoisson::new(&data.v, &model, 4);
+    let mut t = 0u64;
+    let s_g = time_it(0, 3, || {
+        t += 1;
+        g.step(t);
+    });
+    report("gibbs", s_g, Some((n, "entries")));
+
+    println!();
+    println!("10k-sample projections:  psgld {:.1}s   ld {:.1}s   gibbs {:.1}s",
+             s_p * 1e4, s_l * 1e4, s_g * 1e4);
+    println!("ratios vs psgld:         ld {:.0}x   gibbs {:.0}x   (paper: 23x, 152x)",
+             s_l / s_p, s_g / s_p);
+}

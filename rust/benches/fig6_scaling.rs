@@ -1,0 +1,60 @@
+//! Bench for Fig. 6: the cluster-simulator sweeps themselves (strong +
+//! weak scaling), printing the paper's series, plus the DSGLD
+//! communication comparison. Also times the simulator so its own cost
+//! is on record.
+//!
+//! Run: `cargo bench --bench fig6_scaling`
+
+mod bench_util;
+use bench_util::{header, report, time_it};
+
+use psgld::cluster::{
+    dsgld_distributed_timing, psgld_distributed_timing, ComputeModel, NetworkModel,
+    TimingWorkload,
+};
+
+fn main() {
+    header("Fig 6: simulated-cluster scaling sweeps");
+    let net = NetworkModel::paper_cluster();
+    let compute = ComputeModel::paper_node();
+    let wl = TimingWorkload::ml10m(50);
+
+    println!("\nFig 6(a) strong scaling (100 samples, virtual seconds):");
+    println!("  nodes   total      compute    comm");
+    for &b in &[5usize, 15, 30, 45, 60, 75, 90, 105, 120] {
+        let rep = psgld_distributed_timing(&wl, b, 100, &net, &compute);
+        println!(
+            "  {b:>5}   {:>8.3}s  {:>8.3}s  {:>8.3}s",
+            rep.virtual_seconds, rep.compute_seconds, rep.comm_seconds
+        );
+    }
+
+    println!("\nFig 6(b) weak scaling (T = 10, data x4 & nodes x2 per step):");
+    println!("  nodes   nnz     total");
+    for s in 0..4u32 {
+        let w = wl.doubled(s);
+        let rep = psgld_distributed_timing(&w, 15 << s, 10, &net, &compute);
+        println!(
+            "  {:>5}   {:>4.0}M   {:>8.3}s",
+            15usize << s,
+            w.nnz as f64 / 1e6,
+            rep.virtual_seconds
+        );
+    }
+
+    println!("\nDSGLD communication comparison (15 nodes, 100 iters):");
+    let p = psgld_distributed_timing(&wl, 15, 100, &net, &compute);
+    let d = dsgld_distributed_timing(&wl, 15, 44_444, 2, 100, &net, &compute);
+    println!(
+        "  psgld comm {:.3}s   dsgld comm {:.3}s   ratio {:.0}x",
+        p.comm_seconds,
+        d.comm_seconds,
+        d.comm_seconds / p.comm_seconds
+    );
+
+    // cost of the simulator itself
+    let s = time_it(3, 20, || {
+        let _ = psgld_distributed_timing(&wl, 120, 100, &net, &compute);
+    });
+    report("\nsimulator sweep cost (one 100-iter point)", s, None);
+}

@@ -1,0 +1,131 @@
+//! Micro-benchmarks of the hot kernels (the §Perf working set):
+//! dense/sparse block gradients by K, the Langevin noise path, the
+//! Gibbs multinomial inner loop, and the HLO dispatch overhead.
+//!
+//! Run: `cargo bench --bench kernels`
+
+mod bench_util;
+use bench_util::{header, report, time_it};
+
+use psgld::data::movielens;
+use psgld::data::sparse::BlockedSparse;
+use psgld::kernels::{grads_dense_core, grads_sparse_core, sgld_apply_core};
+use psgld::linalg::{Mat, StackedBlocks};
+use psgld::rng::{Dist, Rng};
+
+fn main() {
+    let mut rng = Rng::seed_from(1);
+
+    header("dense block gradients (64x64 block)");
+    for &k in &[8usize, 16, 32, 50, 64] {
+        let m = 64;
+        let w = Mat::uniform(m, k, 0.1, 1.0, &mut rng);
+        let ht = Mat::uniform(m, k, 0.1, 1.0, &mut rng);
+        let v = Mat::uniform(m, m, 0.0, 8.0, &mut rng);
+        let mut gw = vec![0f32; m * k];
+        let mut ght = vec![0f32; m * k];
+        let s = time_it(5, 30, || {
+            gw.fill(0.0);
+            ght.fill(0.0);
+            grads_dense_core(
+                w.as_slice(), m, ht.as_slice(), m, k, v.as_slice(), 1.0, 1.0,
+                &mut gw, &mut ght,
+            );
+        });
+        report(
+            &format!("dense_grads/K={k}"),
+            s,
+            Some(((m * m) as f64, "entries")),
+        );
+    }
+
+    header("sparse block gradients (movielens-like block, K=50)");
+    let csr = movielens::movielens_like(0.05, 50, 2);
+    let bs = BlockedSparse::from_csr(&csr, 4).unwrap();
+    let blk = bs.block(0, 0);
+    let m = bs.grid().row_range(0).len();
+    let n = bs.grid().col_range(0).len();
+    let w = Mat::uniform(m, 50, 0.1, 1.0, &mut rng);
+    let ht = Mat::uniform(n, 50, 0.1, 1.0, &mut rng);
+    let mut gw = vec![0f32; m * 50];
+    let mut ght = vec![0f32; n * 50];
+    let s = time_it(3, 20, || {
+        gw.fill(0.0);
+        ght.fill(0.0);
+        grads_sparse_core(w.as_slice(), ht.as_slice(), 50, blk, 1.0, 1.0, &mut gw, &mut ght);
+    });
+    report("sparse_grads/K=50", s, Some((blk.nnz() as f64, "nnz")));
+
+    header("SGLD apply (drift + Langevin noise + mirror)");
+    for &len in &[1usize << 14, 1 << 18, 1 << 21] {
+        let g = vec![0.5f32; len];
+        let mut x = vec![0.1f32; len];
+        let s = time_it(3, 20, || {
+            sgld_apply_core(&mut x, &g, 0.01, 1.0, 1.0, true, &mut rng);
+        });
+        report(&format!("sgld_apply/{len}"), s, Some((len as f64, "entries")));
+    }
+
+    header("distribution samplers");
+    let s = time_it(3, 10, || {
+        let mut acc = 0f64;
+        for _ in 0..100_000 {
+            acc += rng.normal();
+        }
+        std::hint::black_box(acc);
+    });
+    report("normal (polar)", s, Some((1e5, "draws")));
+    let s = time_it(3, 10, || {
+        let mut acc = 0u64;
+        for _ in 0..100_000 {
+            acc += rng.poisson(8.0);
+        }
+        std::hint::black_box(acc);
+    });
+    report("poisson(8)", s, Some((1e5, "draws")));
+    let s = time_it(3, 10, || {
+        let mut out = [0u64; 32];
+        let w = [1.0f64; 32];
+        for _ in 0..10_000 {
+            rng.multinomial(30, &w, &mut out);
+        }
+        std::hint::black_box(out);
+    });
+    report("multinomial(30, K=32) [gibbs inner]", s, Some((1e4, "draws")));
+    let s = time_it(3, 10, || {
+        let mut acc = 0f64;
+        for _ in 0..100_000 {
+            acc += rng.gamma(2.5, 1.0);
+        }
+        std::hint::black_box(acc);
+    });
+    report("gamma(2.5)", s, Some((1e5, "draws")));
+
+    // HLO dispatch overhead, when artifacts exist
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        header("HLO batched part-update dispatch (B=4, 32x32, K=16)");
+        let mut rt = psgld::runtime::XlaRuntime::new(dir).unwrap();
+        let entry = rt
+            .manifest()
+            .find_part_update(1.0, 4, 32, 32, 16, true)
+            .unwrap()
+            .name
+            .clone();
+        let mk = |rng: &mut Rng, b: usize, r: usize, c: usize| {
+            let blocks: Vec<Mat> =
+                (0..b).map(|_| Mat::uniform(r, c, 0.1, 1.0, rng)).collect();
+            StackedBlocks::from_blocks(&blocks).unwrap()
+        };
+        let ws = mk(&mut rng, 4, 32, 16);
+        let hs = mk(&mut rng, 4, 16, 32);
+        let vs = mk(&mut rng, 4, 32, 32);
+        rt.part_update(&entry, &ws, &hs, &vs, 0.01, 4.0, 1.0, 1.0, [1, 2])
+            .unwrap();
+        let s = time_it(3, 30, || {
+            rt.part_update(&entry, &ws, &hs, &vs, 0.01, 4.0, 1.0, 1.0, [1, 2])
+                .unwrap();
+        });
+        report("part_update dispatch", s, Some(((4 * 32 * 32) as f64, "entries")));
+    }
+}

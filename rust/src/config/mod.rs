@@ -1,0 +1,326 @@
+//! Configuration system: experiment configs with JSON round-tripping
+//! (via the in-crate [`crate::util::json`] substrate), step-size
+//! schedules and run settings shared by every sampler and the CLI.
+
+use std::path::Path;
+
+use crate::model::NmfModel;
+use crate::partition::PartSchedule;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Re-export so configs and models travel together.
+pub type ModelConfig = NmfModel;
+
+/// Step-size schedule ε_t (paper Eq. 4 conditions).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepSchedule {
+    /// Constant ε (the paper's LD baseline uses ε = 0.2).
+    Constant { eps: f64 },
+    /// ε_t = (a / t)^b with b ∈ (0.5, 1] (the paper's SGLD/PSGLD choice).
+    Polynomial { a: f64, b: f64 },
+}
+
+impl StepSchedule {
+    /// ε at iteration `t` (1-based).
+    #[inline]
+    pub fn eps(&self, t: u64) -> f64 {
+        match *self {
+            StepSchedule::Constant { eps } => eps,
+            StepSchedule::Polynomial { a, b } => (a / t.max(1) as f64).powf(b),
+        }
+    }
+
+    /// Check the Robbins-Monro conditions (Σε = ∞, Σε² < ∞).
+    pub fn satisfies_convergence_conditions(&self) -> bool {
+        match *self {
+            StepSchedule::Constant { .. } => false,
+            StepSchedule::Polynomial { b, .. } => b > 0.5 && b <= 1.0,
+        }
+    }
+
+    /// The paper's PSGLD setting (a = 0.01, b = 0.51).
+    pub fn paper_psgld() -> Self {
+        StepSchedule::Polynomial { a: 0.01, b: 0.51 }
+    }
+
+    /// The paper's SGLD setting (a = 1, b = 0.51).
+    pub fn paper_sgld() -> Self {
+        StepSchedule::Polynomial { a: 1.0, b: 0.51 }
+    }
+
+    /// The paper's LD setting (constant ε). The reported 0.2 assumes the
+    /// authors' gradient normalisation; experiments override per run.
+    pub fn paper_ld(eps: f64) -> Self {
+        StepSchedule::Constant { eps }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            StepSchedule::Constant { eps } => Json::obj(vec![
+                ("kind", Json::str("constant")),
+                ("eps", Json::num(eps)),
+            ]),
+            StepSchedule::Polynomial { a, b } => Json::obj(vec![
+                ("kind", Json::str("polynomial")),
+                ("a", Json::num(a)),
+                ("b", Json::num(b)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        match j.field("kind")?.as_str()? {
+            "constant" => Ok(StepSchedule::Constant { eps: j.field("eps")?.as_f64()? }),
+            "polynomial" => Ok(StepSchedule::Polynomial {
+                a: j.field("a")?.as_f64()?,
+                b: j.field("b")?.as_f64()?,
+            }),
+            other => Err(Error::Config(format!("unknown step kind '{other}'"))),
+        }
+    }
+}
+
+fn schedule_to_json(s: PartSchedule) -> Json {
+    Json::str(match s {
+        PartSchedule::Cyclic => "cyclic",
+        PartSchedule::RandomShift => "random_shift",
+        PartSchedule::RandomPerm => "random_perm",
+    })
+}
+
+fn schedule_from_json(j: &Json) -> Result<PartSchedule> {
+    match j.as_str()? {
+        "cyclic" => Ok(PartSchedule::Cyclic),
+        "random_shift" => Ok(PartSchedule::RandomShift),
+        "random_perm" => Ok(PartSchedule::RandomPerm),
+        other => Err(Error::Config(format!("unknown schedule '{other}'"))),
+    }
+}
+
+fn model_to_json(m: &NmfModel) -> Json {
+    Json::obj(vec![
+        ("k", Json::num(m.k as f64)),
+        ("beta", Json::num(m.beta as f64)),
+        ("phi", Json::num(m.phi as f64)),
+        ("lam_w", Json::num(m.lam_w as f64)),
+        ("lam_h", Json::num(m.lam_h as f64)),
+        ("mirror", Json::Bool(m.mirror)),
+    ])
+}
+
+fn model_from_json(j: &Json) -> Result<NmfModel> {
+    Ok(NmfModel {
+        k: j.field("k")?.as_usize()?,
+        beta: j.field("beta")?.as_f64()? as f32,
+        phi: j.field("phi")?.as_f64()? as f32,
+        lam_w: j.field("lam_w")?.as_f64()? as f32,
+        lam_h: j.field("lam_h")?.as_f64()? as f32,
+        mirror: j.field("mirror")?.as_bool()?,
+    })
+}
+
+/// Settings of one sampling run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Total iterations T (samples generated).
+    pub t_total: u64,
+    /// Burn-in iterations discarded from posterior summaries.
+    pub burn_in: u64,
+    /// Keep every `thin`-th sample in collected statistics.
+    pub thin: u64,
+    /// Step-size schedule.
+    pub step: StepSchedule,
+    /// How often (iterations) to record the monitor value; monitors are
+    /// excluded from per-iteration timing.
+    pub monitor_every: u64,
+    /// Part schedule (PSGLD-family only).
+    pub schedule: PartSchedule,
+}
+
+impl RunConfig {
+    /// Small-run defaults for examples/tests.
+    pub fn quick(t_total: u64) -> Self {
+        RunConfig {
+            t_total,
+            burn_in: t_total / 2,
+            thin: 1,
+            step: StepSchedule::paper_psgld(),
+            monitor_every: (t_total / 100).max(1),
+            schedule: PartSchedule::Cyclic,
+        }
+    }
+
+    pub fn with_step(mut self, step: StepSchedule) -> Self {
+        self.step = step;
+        self
+    }
+
+    pub fn with_schedule(mut self, schedule: PartSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn with_monitor_every(mut self, every: u64) -> Self {
+        self.monitor_every = every.max(1);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.t_total == 0 {
+            return Err(Error::Config("t_total must be positive".into()));
+        }
+        if self.burn_in >= self.t_total {
+            return Err(Error::Config(format!(
+                "burn_in {} >= t_total {}",
+                self.burn_in, self.t_total
+            )));
+        }
+        if self.thin == 0 || self.monitor_every == 0 {
+            return Err(Error::Config("thin/monitor_every must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t_total", Json::num(self.t_total as f64)),
+            ("burn_in", Json::num(self.burn_in as f64)),
+            ("thin", Json::num(self.thin as f64)),
+            ("step", self.step.to_json()),
+            ("monitor_every", Json::num(self.monitor_every as f64)),
+            ("schedule", schedule_to_json(self.schedule)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(RunConfig {
+            t_total: j.field("t_total")?.as_u64()?,
+            burn_in: j.field("burn_in")?.as_u64()?,
+            thin: j.field("thin")?.as_u64()?,
+            step: StepSchedule::from_json(j.field("step")?)?,
+            monitor_every: j.field("monitor_every")?.as_u64()?,
+            schedule: schedule_from_json(j.field("schedule")?)?,
+        })
+    }
+}
+
+/// A full experiment description (what the CLI consumes).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub model: ModelConfig,
+    pub run: RunConfig,
+    /// Grid size B (PSGLD / DSGD / cluster families).
+    pub b: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Output directory for CSVs.
+    pub outdir: String,
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("model", model_to_json(&self.model)),
+            ("run", self.run.to_json()),
+            ("b", Json::num(self.b as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("outdir", Json::str(self.outdir.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(ExperimentConfig {
+            name: j.field("name")?.as_str()?.to_string(),
+            model: model_from_json(j.field("model")?)?,
+            run: RunConfig::from_json(j.field("run")?)?,
+            b: j.field("b")?.as_usize()?,
+            seed: j.field("seed")?.as_u64()?,
+            outdir: j.field("outdir")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polynomial_step_decays() {
+        let s = StepSchedule::paper_psgld();
+        assert!(s.eps(1) > s.eps(10));
+        assert!(s.eps(10) > s.eps(1000));
+        assert!(s.satisfies_convergence_conditions());
+        assert!(!StepSchedule::Constant { eps: 0.1 }.satisfies_convergence_conditions());
+        assert!(!StepSchedule::Polynomial { a: 1.0, b: 0.5 }
+            .satisfies_convergence_conditions());
+    }
+
+    #[test]
+    fn step_t_zero_safe() {
+        let s = StepSchedule::paper_sgld();
+        assert!(s.eps(0).is_finite());
+        assert_eq!(s.eps(0), s.eps(1));
+    }
+
+    #[test]
+    fn step_json_roundtrip() {
+        for s in [StepSchedule::paper_psgld(), StepSchedule::paper_ld(0.2)] {
+            let back = StepSchedule::from_json(&s.to_json()).unwrap();
+            assert_eq!(s, back);
+        }
+    }
+
+    #[test]
+    fn run_config_validation() {
+        assert!(RunConfig::quick(100).validate().is_ok());
+        let mut bad = RunConfig::quick(100);
+        bad.burn_in = 100;
+        assert!(bad.validate().is_err());
+        let mut bad2 = RunConfig::quick(100);
+        bad2.thin = 0;
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn experiment_config_json_roundtrip() {
+        let cfg = ExperimentConfig {
+            name: "fig2a".into(),
+            model: ModelConfig::poisson(32),
+            run: RunConfig::quick(1000).with_schedule(PartSchedule::RandomShift),
+            b: 8,
+            seed: 42,
+            outdir: "results".into(),
+        };
+        let dir = std::env::temp_dir().join("psgld_cfg_test");
+        let path = dir.join("cfg.json");
+        cfg.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.b, 8);
+        assert_eq!(back.run.schedule, PartSchedule::RandomShift);
+        assert_eq!(back.run.step, cfg.run.step);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        assert!(StepSchedule::from_json(&Json::parse(r#"{"kind":"nope"}"#).unwrap()).is_err());
+        assert!(schedule_from_json(&Json::str("bogus")).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! The L3 coordinator over the AOT-compiled HLO executables: drives the
+//! PSGLD chain with **one PJRT dispatch per iteration** — the batched
+//! part update `[B,m,K]×[B,K,n]×[B,m,n] → (W', H')` — exactly the
+//! paper's "one CUDA launch per part" structure, retargeted at XLA.
+//!
+//! State lives in stacked-block layout ([`StackedBlocks`]); aligning the
+//! H column-stripes with the current part's generalized diagonal is a
+//! gather by the part permutation (cheap contiguous copies), and the V
+//! blocks of every cyclic part are pre-stacked once at construction so
+//! the hot loop moves no data-matrix bytes at all.
+
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use std::path::Path;
+
+use crate::config::RunConfig;
+use crate::linalg::{Mat, StackedBlocks};
+use crate::model::NmfModel;
+use crate::partition::{GridPartition, Part, PartSchedule, PartScheduler};
+use crate::rng::Rng;
+use crate::runtime::{ArtifactKind, XlaRuntime};
+use crate::samplers::{FactorState, Sampler};
+use crate::{Error, Result};
+
+/// PSGLD driven through the batched HLO part-update executable.
+pub struct HloPsgld {
+    runtime: XlaRuntime,
+    entry: String,
+    loglik_entry: Option<String>,
+    model: NmfModel,
+    grid: GridPartition,
+    /// W row-stripes `[B, m, K]`.
+    ws: StackedBlocks,
+    /// H column-stripes `[B, K, n]` (slot = stripe index).
+    hs: StackedBlocks,
+    /// Gather scratch for the part-permuted H stripes.
+    hs_gather: StackedBlocks,
+    /// Pre-stacked V blocks per cyclic shift: `v_parts[p]` slot `b`
+    /// holds block `(b, (b+p) % B)`.
+    v_parts: Vec<StackedBlocks>,
+    scheduler: PartScheduler,
+    run_cfg: RunConfig,
+    seed: u64,
+    /// Assembled state (refreshed after every step).
+    state: FactorState,
+    /// Dense V kept for the native monitor fallback.
+    v: Mat,
+}
+
+impl HloPsgld {
+    /// Build from a dense matrix; requires `B | I`, `B | J` and a
+    /// matching `part_update` artifact in the manifest.
+    pub fn new(
+        artifacts: &Path,
+        v: &Mat,
+        model: &NmfModel,
+        b: usize,
+        run: RunConfig,
+        seed: u64,
+    ) -> Result<Self> {
+        let grid = GridPartition::new(v.rows(), v.cols(), b)?;
+        if !grid.uniform_blocks() {
+            return Err(Error::Config(format!(
+                "HLO path needs uniform blocks: B={b} must divide I={} and J={}",
+                v.rows(),
+                v.cols()
+            )));
+        }
+        if matches!(run.schedule, PartSchedule::RandomPerm) {
+            return Err(Error::Config(
+                "HLO path supports Cyclic/RandomShift schedules (V blocks are \
+                 pre-stacked per cyclic part)"
+                    .into(),
+            ));
+        }
+        let m = v.rows() / b;
+        let n = v.cols() / b;
+        let k = model.k;
+        let mut runtime = XlaRuntime::new(artifacts)?;
+        let entry = runtime
+            .manifest()
+            .find_part_update(model.beta, b, m, n, k, model.mirror)?
+            .name
+            .clone();
+        runtime.prepare(&entry)?;
+        let loglik_entry = runtime
+            .manifest()
+            .find_full(ArtifactKind::Loglik, model.beta, v.rows(), v.cols(), k)
+            .ok()
+            .map(|e| e.name.clone());
+
+        let mut rng = Rng::derive(seed, &[0x910_9516]);
+        let state = FactorState::from_prior(model, v.rows(), v.cols(), &mut rng);
+
+        // stack W row-stripes and H column-stripes
+        let w_blocks: Vec<Mat> =
+            (0..b).map(|bi| state.w.slice_block(bi * m, (bi + 1) * m, 0, k)).collect();
+        let h = state.h();
+        let h_blocks: Vec<Mat> =
+            (0..b).map(|bj| h.slice_block(0, k, bj * n, (bj + 1) * n)).collect();
+
+        // pre-stack the V blocks of each cyclic part
+        let v_parts: Vec<StackedBlocks> = (0..b)
+            .map(|p| {
+                let blocks: Vec<Mat> = (0..b)
+                    .map(|bi| {
+                        let bj = (bi + p) % b;
+                        v.slice_block(bi * m, (bi + 1) * m, bj * n, (bj + 1) * n)
+                    })
+                    .collect();
+                StackedBlocks::from_blocks(&blocks)
+            })
+            .collect::<Result<_>>()?;
+
+        Ok(HloPsgld {
+            runtime,
+            entry,
+            loglik_entry,
+            model: model.clone(),
+            scheduler: PartScheduler::new(run.schedule, b),
+            run_cfg: run,
+            grid,
+            ws: StackedBlocks::from_blocks(&w_blocks)?,
+            hs: StackedBlocks::from_blocks(&h_blocks)?,
+            hs_gather: StackedBlocks::zeros(b, k, n),
+            v_parts,
+            seed,
+            state,
+            v: v.clone(),
+        })
+    }
+
+    pub fn grid(&self) -> &GridPartition {
+        &self.grid
+    }
+
+    /// Monitor the data log-likelihood through the lowered HLO monitor
+    /// when available, otherwise natively.
+    pub fn loglik(&mut self) -> f64 {
+        let h = self.state.h();
+        if let Some(name) = self.loglik_entry.clone() {
+            let dims = (self.grid.rows(), self.grid.cols(), self.model.k);
+            if let Ok(ll) = self.runtime.loglik(
+                &name,
+                self.state.w.as_slice(),
+                h.as_slice(),
+                self.v.as_slice(),
+                dims,
+            ) {
+                return ll;
+            }
+        }
+        self.model.loglik_dense(&self.state.w, &h, &self.v)
+    }
+
+    fn refresh_state(&mut self) {
+        self.state.w = self.ws.to_row_stripes();
+        self.state.ht = self.hs.to_col_stripes().transpose();
+    }
+
+    /// The per-iteration body; split out so `step` stays panic-free at
+    /// the trait boundary.
+    fn try_step(&mut self, t: u64) -> Result<()> {
+        let b = self.grid.b();
+        let mut rng = Rng::derive(self.seed, &[t, 0xcafe]);
+        let part = self.scheduler.next_part(&mut rng);
+        let shift = part.perm[0]; // cyclic parts are determined by the shift
+        debug_assert_eq!(part, Part::cyclic(b, shift));
+        let eps = self.run_cfg.step.eps(t) as f32;
+        let scale = self.grid.scale_dense(&part);
+        let seed_words = Rng::derive(self.seed, &[t, 0x5eed]).seed_words();
+
+        // align H stripes with the part diagonal: slot b <- stripe perm[b]
+        self.hs.gather_perm_into(&part.perm, &mut self.hs_gather);
+        let (ws_next, hs_next) = self.runtime.part_update(
+            &self.entry,
+            &self.ws,
+            &self.hs_gather,
+            &self.v_parts[shift],
+            eps,
+            scale,
+            self.model.lam_w,
+            self.model.lam_h,
+            seed_words,
+        )?;
+        self.ws = ws_next;
+        self.hs.scatter_perm_from(&part.perm, &hs_next);
+        self.refresh_state();
+        Ok(())
+    }
+}
+
+impl Sampler for HloPsgld {
+    fn step(&mut self, t: u64) {
+        self.try_step(t).expect("HLO part update failed");
+    }
+
+    fn state(&self) -> &FactorState {
+        &self.state
+    }
+
+    fn model(&self) -> &NmfModel {
+        &self.model
+    }
+
+    fn name(&self) -> &'static str {
+        "psgld_hlo"
+    }
+}
+
+/// Full-batch Langevin dynamics through the lowered `ld_update`
+/// executable (the HLO twin of [`crate::samplers::Ld`]).
+pub struct HloLd {
+    runtime: XlaRuntime,
+    entry: String,
+    model: NmfModel,
+    state: FactorState,
+    v: Mat,
+    eps: f64,
+    seed: u64,
+}
+
+impl HloLd {
+    pub fn new(
+        artifacts: &Path,
+        v: &Mat,
+        model: &NmfModel,
+        eps: f64,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut runtime = XlaRuntime::new(artifacts)?;
+        let entry = runtime
+            .manifest()
+            .find_full(ArtifactKind::LdUpdate, model.beta, v.rows(), v.cols(), model.k)?
+            .name
+            .clone();
+        runtime.prepare(&entry)?;
+        let mut rng = Rng::derive(seed, &[0x91_01d]);
+        let state = FactorState::from_prior(model, v.rows(), v.cols(), &mut rng);
+        Ok(HloLd {
+            runtime,
+            entry,
+            model: model.clone(),
+            state,
+            v: v.clone(),
+            eps,
+            seed,
+        })
+    }
+}
+
+impl Sampler for HloLd {
+    fn step(&mut self, t: u64) {
+        let (i, j, k) = self.state.shape();
+        let h = self.state.h();
+        let seed_words = Rng::derive(self.seed, &[t, 0x5eed]).seed_words();
+        let (w2, h2) = self
+            .runtime
+            .ld_update(
+                &self.entry,
+                self.state.w.as_slice(),
+                h.as_slice(),
+                self.v.as_slice(),
+                (i, j, k),
+                self.eps as f32,
+                self.model.lam_w,
+                self.model.lam_h,
+                seed_words,
+            )
+            .expect("HLO ld update failed");
+        self.state.w = Mat::from_vec(i, k, w2).expect("shape");
+        self.state.ht = Mat::from_vec(k, j, h2).expect("shape").transpose();
+    }
+
+    fn state(&self) -> &FactorState {
+        &self.state
+    }
+
+    fn model(&self) -> &NmfModel {
+        &self.model
+    }
+
+    fn name(&self) -> &'static str {
+        "ld_hlo"
+    }
+}
+
+// Integration tests against the real artifacts live in
+// rust/tests/runtime_roundtrip.rs and rust/tests/e2e_samplers.rs.

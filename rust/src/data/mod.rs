@@ -1,0 +1,33 @@
+//! Datasets: synthetic generators matching the paper's experiments and
+//! the sparse-matrix substrate for the MovieLens-scale runs.
+
+pub mod audio;
+pub mod movielens;
+pub mod sparse;
+pub mod synth;
+
+pub use sparse::{BlockedSparse, Csr};
+
+use crate::linalg::Mat;
+
+/// A dense observed matrix plus (when synthetic) its generative factors.
+#[derive(Clone, Debug)]
+pub struct DenseDataset {
+    /// Observed matrix V (I × J).
+    pub v: Mat,
+    /// Ground-truth dictionary, when known.
+    pub w_true: Option<Mat>,
+    /// Ground-truth weights, when known.
+    pub h_true: Option<Mat>,
+}
+
+impl DenseDataset {
+    pub fn shape(&self) -> (usize, usize) {
+        self.v.shape()
+    }
+
+    /// Number of observed entries (N in the paper).
+    pub fn n(&self) -> usize {
+        self.v.rows() * self.v.cols()
+    }
+}

@@ -1,0 +1,254 @@
+//! MovieLens-like sparse ratings (Fig. 5/6 substitute — DESIGN.md §3).
+//!
+//! grouplens.org is not reachable from this environment, so we generate
+//! a synthetic dataset with the same statistics MovieLens 10M has:
+//! I = 10681 movies × J = 71567 users, ~10M ratings (1.3% density),
+//! long-tailed (Zipf) movie/user popularity, and ½-star ratings in
+//! [0.5, 5] drawn from a low-rank latent model. `load_movielens` parses
+//! the real `ratings.dat` when a copy is available, so the harness runs
+//! on the genuine data unchanged if provided.
+
+use std::io::BufRead;
+
+use crate::data::sparse::Csr;
+use crate::rng::{Dist, Rng};
+use crate::Result;
+
+/// MovieLens 10M dimensions (movies × users).
+pub const ML10M_MOVIES: usize = 10_681;
+pub const ML10M_USERS: usize = 71_567;
+pub const ML10M_RATINGS: usize = 10_000_054;
+
+/// Zipf-ish popularity weights: `w_r = 1 / (r + shift)^alpha`, shuffled
+/// so popularity is not index-correlated.
+fn popularity(n: usize, alpha: f64, shift: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut w: Vec<f64> = (0..n).map(|r| 1.0 / (r as f64 + shift).powf(alpha)).collect();
+    // Fisher-Yates shuffle
+    for i in (1..n).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        w.swap(i, j);
+    }
+    let s: f64 = w.iter().sum();
+    for x in &mut w {
+        *x /= s;
+    }
+    w
+}
+
+/// Alias-method table for O(1) categorical sampling.
+struct Alias {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl Alias {
+    fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        let sum: f64 = weights.iter().sum();
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0u32; n];
+        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * n as f64 / sum).collect();
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().expect("non-empty");
+            let l = *large.last().expect("non-empty");
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            scaled[l as usize] += scaled[s as usize] - 1.0;
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for i in large.into_iter().chain(small) {
+            prob[i as usize] = 1.0;
+        }
+        Alias { prob, alias }
+    }
+
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> u32 {
+        let i = rng.next_below(self.prob.len() as u64) as usize;
+        if rng.next_f64() < self.prob[i] {
+            i as u32
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+/// Generate a MovieLens-like sparse ratings matrix (movies × users).
+///
+/// `scale` shrinks every dimension and the rating count proportionally
+/// (scale = 1.0 reproduces the full 10M layout; scale = 0.05 is a
+/// laptop-friendly half-million-rating variant).
+pub fn movielens_like(scale: f64, k: usize, seed: u64) -> Csr {
+    let rows = ((ML10M_MOVIES as f64 * scale) as usize).max(8);
+    let cols = ((ML10M_USERS as f64 * scale) as usize).max(8);
+    let target = ((ML10M_RATINGS as f64 * scale * scale) as usize)
+        .min(rows * cols / 4)
+        .max(rows + cols);
+    movielens_like_dims(rows, cols, target, k, seed)
+}
+
+/// Fully parameterised generator (used by the weak-scaling experiments).
+pub fn movielens_like_dims(
+    rows: usize,
+    cols: usize,
+    target_nnz: usize,
+    k: usize,
+    seed: u64,
+) -> Csr {
+    let mut rng = Rng::derive(seed, &[0x310c, rows as u64, cols as u64]);
+    // latent factors: gamma so mu > 0 and mildly skewed
+    let wf: Vec<f32> = (0..rows * k).map(|_| rng.gamma(2.0, 0.3) as f32).collect();
+    let hf: Vec<f32> = (0..cols * k).map(|_| rng.gamma(2.0, 0.3) as f32).collect();
+    let row_pop = popularity(rows, 0.8, 10.0, &mut rng);
+    let col_pop = popularity(cols, 0.7, 20.0, &mut rng);
+    let row_alias = Alias::new(&row_pop);
+    let col_alias = Alias::new(&col_pop);
+
+    // Sample positions with dedup via a hash set of packed (row, col).
+    let mut seen = std::collections::HashSet::with_capacity(target_nnz * 2);
+    let mut triplets: Vec<(u32, u32, f32)> = Vec::with_capacity(target_nnz);
+    let mut attempts = 0usize;
+    let max_attempts = target_nnz * 20;
+    while triplets.len() < target_nnz && attempts < max_attempts {
+        attempts += 1;
+        let r = row_alias.sample(&mut rng);
+        let c = col_alias.sample(&mut rng);
+        let key = (r as u64) << 32 | c as u64;
+        if !seen.insert(key) {
+            continue;
+        }
+        let mut mu = 0f32;
+        for kk in 0..k {
+            mu += wf[r as usize * k + kk] * hf[c as usize * k + kk];
+        }
+        // map mu (mean ~ k*0.36) to the 0.5..5 rating scale with noise
+        let base = 3.5 * mu / (k as f32 * 0.36);
+        let noisy = base as f64 + 0.4 * rng.normal();
+        let rating = (2.0 * noisy).round().clamp(1.0, 10.0) / 2.0;
+        triplets.push((r, c, rating as f32));
+    }
+    Csr::from_triplets(rows, cols, &mut triplets).expect("deduped triplets")
+}
+
+/// Parse a real MovieLens `ratings.dat` (`user::movie::rating::ts`).
+/// Returns a movies × users CSR with ids remapped densely.
+pub fn load_movielens(path: &std::path::Path) -> Result<Csr> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut raw: Vec<(u32, u32, f32)> = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        let mut it = line.split("::");
+        let (Some(u), Some(m), Some(r)) = (it.next(), it.next(), it.next()) else {
+            continue;
+        };
+        let (Ok(u), Ok(m), Ok(r)) = (u.parse::<u32>(), m.parse::<u32>(), r.parse::<f32>())
+        else {
+            continue;
+        };
+        raw.push((m, u, r)); // movies are rows
+    }
+    // densify ids
+    let mut movie_ids: Vec<u32> = raw.iter().map(|t| t.0).collect();
+    movie_ids.sort_unstable();
+    movie_ids.dedup();
+    let mut user_ids: Vec<u32> = raw.iter().map(|t| t.1).collect();
+    user_ids.sort_unstable();
+    user_ids.dedup();
+    let midx: std::collections::HashMap<u32, u32> =
+        movie_ids.iter().enumerate().map(|(i, &m)| (m, i as u32)).collect();
+    let uidx: std::collections::HashMap<u32, u32> =
+        user_ids.iter().enumerate().map(|(i, &u)| (u, i as u32)).collect();
+    let mut triplets: Vec<(u32, u32, f32)> =
+        raw.into_iter().map(|(m, u, r)| (midx[&m], uidx[&u], r)).collect();
+    Csr::from_triplets(movie_ids.len(), user_ids.len(), &mut triplets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alias_sampler_matches_weights() {
+        let mut rng = Rng::seed_from(1);
+        let w = [0.1, 0.2, 0.3, 0.4];
+        let alias = Alias::new(&w);
+        let mut counts = [0usize; 4];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[alias.sample(&mut rng) as usize] += 1;
+        }
+        for i in 0..4 {
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - w[i]).abs() < 0.01, "i={i} {got}");
+        }
+    }
+
+    #[test]
+    fn generator_hits_target_stats() {
+        let m = movielens_like(0.02, 8, 2);
+        assert!(m.rows() >= 8 && m.cols() >= 8);
+        // hit at least 90% of the target nnz
+        let target = (ML10M_RATINGS as f64 * 0.02 * 0.02) as usize;
+        assert!(
+            m.nnz() as f64 > 0.9 * target as f64,
+            "nnz {} target {target}",
+            m.nnz()
+        );
+        // ratings on the half-star scale in [0.5, 5]
+        let mut all_ok = true;
+        for i in 0..m.rows() {
+            for (_, v) in m.row(i) {
+                all_ok &= (0.5..=5.0).contains(&v) && (v * 2.0).fract() == 0.0;
+            }
+        }
+        assert!(all_ok);
+        // global mean in a plausible MovieLens band
+        assert!((2.5..=4.5).contains(&m.mean()), "{}", m.mean());
+    }
+
+    #[test]
+    fn popularity_is_long_tailed() {
+        let mut rng = Rng::seed_from(3);
+        let w = popularity(1000, 0.8, 10.0, &mut rng);
+        let mut sorted = w.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top100: f64 = sorted[..100].iter().sum();
+        assert!(top100 > 0.2, "head mass {top100}"); // concentrated head
+        assert!(top100 < 0.9); // but not degenerate
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = movielens_like(0.01, 4, 5);
+        let b = movielens_like(0.01, 4, 5);
+        assert_eq!(a.nnz(), b.nnz());
+        let ra: Vec<_> = a.row(0).collect();
+        let rb: Vec<_> = b.row(0).collect();
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn loader_parses_dat_format() {
+        let dir = std::env::temp_dir().join("psgld_ml_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ratings.dat");
+        std::fs::write(&path, "1::10::4.5::123\n2::10::3::124\n1::20::5::125\n").unwrap();
+        let m = load_movielens(&path).unwrap();
+        assert_eq!(m.rows(), 2); // movies 10, 20
+        assert_eq!(m.cols(), 2); // users 1, 2
+        assert_eq!(m.nnz(), 3);
+    }
+}

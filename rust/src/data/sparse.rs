@@ -1,0 +1,242 @@
+//! CSR sparse matrix + its B×B block decomposition.
+//!
+//! For sparse MF (MovieLens) the likelihood runs over *observed* entries
+//! only; `N` in the paper's `N/|Π|` factor becomes the total nnz and
+//! `|Π|` the nnz inside the part. The block decomposition stores each
+//! grid cell as a local-index COO triple list, so a block update is one
+//! contiguous walk.
+
+use crate::partition::{GridPartition, Part};
+use crate::{Error, Result};
+
+/// Compressed sparse row f32 matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets (need not be sorted;
+    /// duplicates are rejected).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &mut Vec<(u32, u32, f32)>,
+    ) -> Result<Self> {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        for w in triplets.windows(2) {
+            if w[0].0 == w[1].0 && w[0].1 == w[1].1 {
+                return Err(Error::Config(format!(
+                    "duplicate entry at ({}, {})",
+                    w[0].0, w[0].1
+                )));
+            }
+        }
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut vals = Vec::with_capacity(triplets.len());
+        for &(r, c, v) in triplets.iter() {
+            if r as usize >= rows || c as usize >= cols {
+                return Err(Error::Shape(format!(
+                    "entry ({r},{c}) outside {rows}x{cols}"
+                )));
+            }
+            indptr[r as usize + 1] += 1;
+            indices.push(c);
+            vals.push(v);
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Ok(Csr { rows, cols, indptr, indices, vals })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// (column, value) pairs of row `i`.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let r = self.indptr[i]..self.indptr[i + 1];
+        self.indices[r.clone()]
+            .iter()
+            .copied()
+            .zip(self.vals[r].iter().copied())
+    }
+
+    /// Mean of the stored values.
+    pub fn mean(&self) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        self.vals.iter().map(|&v| v as f64).sum::<f64>() / self.vals.len() as f64
+    }
+}
+
+/// One grid cell of a [`BlockedSparse`]: local-index COO, sorted by
+/// (row, col) for a cache-friendly sequential walk.
+#[derive(Clone, Debug, Default)]
+pub struct BlockEntries {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl BlockEntries {
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+/// B×B block decomposition of a sparse matrix over a [`GridPartition`].
+#[derive(Clone, Debug)]
+pub struct BlockedSparse {
+    grid: GridPartition,
+    /// Block (bi, bj) at index `bi * B + bj`.
+    blocks: Vec<BlockEntries>,
+    nnz: usize,
+}
+
+impl BlockedSparse {
+    pub fn from_csr(csr: &Csr, b: usize) -> Result<Self> {
+        let grid = GridPartition::new(csr.rows(), csr.cols(), b)?;
+        let mut blocks: Vec<BlockEntries> = vec![BlockEntries::default(); b * b];
+        for i in 0..csr.rows() {
+            let bi = grid.row_stripe_of(i);
+            let li = (i - grid.row_range(bi).start) as u32;
+            for (j, v) in csr.row(i) {
+                let bj = grid.col_stripe_of(j as usize);
+                let lj = (j as usize - grid.col_range(bj).start) as u32;
+                let blk = &mut blocks[bi * b + bj];
+                blk.rows.push(li);
+                blk.cols.push(lj);
+                blk.vals.push(v);
+            }
+        }
+        Ok(BlockedSparse { grid, blocks, nnz: csr.nnz() })
+    }
+
+    #[inline]
+    pub fn grid(&self) -> &GridPartition {
+        &self.grid
+    }
+
+    #[inline]
+    pub fn b(&self) -> usize {
+        self.grid.b()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    #[inline]
+    pub fn block(&self, bi: usize, bj: usize) -> &BlockEntries {
+        &self.blocks[bi * self.grid.b() + bj]
+    }
+
+    /// nnz inside a part (`|Π|` for sparse data).
+    pub fn part_nnz(&self, part: &Part) -> usize {
+        (0..self.grid.b())
+            .map(|b| self.block(b, part.perm[b]).nnz())
+            .sum()
+    }
+
+    /// `N/|Π|` with N = total nnz.
+    pub fn scale(&self, part: &Part) -> f32 {
+        let pn = self.part_nnz(part);
+        if pn == 0 {
+            0.0
+        } else {
+            self.nnz as f32 / pn as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        let mut t = vec![
+            (0u32, 1u32, 1.0f32),
+            (0, 3, 2.0),
+            (1, 0, 3.0),
+            (2, 2, 4.0),
+            (3, 3, 5.0),
+            (3, 0, 6.0),
+        ];
+        Csr::from_triplets(4, 4, &mut t).unwrap()
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let m = small();
+        assert_eq!(m.nnz(), 6);
+        let row0: Vec<_> = m.row(0).collect();
+        assert_eq!(row0, vec![(1, 1.0), (3, 2.0)]);
+        let row3: Vec<_> = m.row(3).collect();
+        assert_eq!(row3, vec![(0, 6.0), (3, 5.0)]); // sorted by col
+        assert!((m.mean() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let mut t = vec![(0u32, 0u32, 1.0f32), (0, 0, 2.0)];
+        assert!(Csr::from_triplets(2, 2, &mut t).is_err());
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut t = vec![(5u32, 0u32, 1.0f32)];
+        assert!(Csr::from_triplets(2, 2, &mut t).is_err());
+    }
+
+    #[test]
+    fn blocked_preserves_all_entries() {
+        let m = small();
+        let bs = BlockedSparse::from_csr(&m, 2).unwrap();
+        let total: usize = (0..2)
+            .flat_map(|bi| (0..2).map(move |bj| (bi, bj)))
+            .map(|(bi, bj)| bs.block(bi, bj).nnz())
+            .sum();
+        assert_eq!(total, m.nnz());
+        // entry (3,3)=5.0 lands in block (1,1) at local (1,1)
+        let blk = bs.block(1, 1);
+        let pos = blk
+            .vals
+            .iter()
+            .position(|&v| v == 5.0)
+            .expect("value present");
+        assert_eq!((blk.rows[pos], blk.cols[pos]), (1, 1));
+    }
+
+    #[test]
+    fn part_nnz_and_scale() {
+        let m = small();
+        let bs = BlockedSparse::from_csr(&m, 2).unwrap();
+        let diag = Part::cyclic(2, 0);
+        let off = Part::cyclic(2, 1);
+        assert_eq!(bs.part_nnz(&diag) + bs.part_nnz(&off), m.nnz());
+        if bs.part_nnz(&diag) > 0 {
+            assert!((bs.scale(&diag) - 6.0 / bs.part_nnz(&diag) as f32).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Synthetic data from the generative model (paper §4.2.1): draw
+//! `(W, H)` from the exponential priors and `V` from the Tweedie
+//! observation model at `mu = WH`.
+
+use crate::data::DenseDataset;
+use crate::linalg::Mat;
+use crate::model::tweedie::tweedie_power;
+use crate::model::NmfModel;
+use crate::rng::{Dist, Rng};
+
+/// Draw one Tweedie observation with mean `mu` for the given `(beta,
+/// phi)`. Supported: β=2 (Gaussian), β=1 (Poisson, φ=1), β=0 (gamma),
+/// β∈(0,1) (compound Poisson-gamma). Panics on the unsupported interval
+/// β∈(1,2) where no Tweedie distribution exists.
+pub fn tweedie_sample(mu: f64, phi: f64, beta: f32, rng: &mut Rng) -> f64 {
+    let mu = mu.max(1e-9);
+    if beta == 2.0 {
+        rng.normal_ms(mu, phi.sqrt())
+    } else if beta == 1.0 {
+        // dispersed Poisson: φ·Po(μ/φ) has mean μ, variance φμ
+        if (phi - 1.0).abs() < 1e-12 {
+            rng.poisson(mu) as f64
+        } else {
+            phi * rng.poisson(mu / phi) as f64
+        }
+    } else if beta == 0.0 {
+        // gamma with mean μ, variance φμ²: shape 1/φ, scale φμ
+        rng.gamma(1.0 / phi, phi * mu)
+    } else if beta > 0.0 && beta < 1.0 {
+        rng.tweedie_cp(mu, phi, tweedie_power(beta) as f64)
+    } else {
+        panic!("no Tweedie distribution for beta = {beta}");
+    }
+}
+
+/// Generate a dense dataset from the model's generative process.
+pub fn from_model(i: usize, j: usize, model: &NmfModel, seed: u64) -> DenseDataset {
+    let mut rng = Rng::derive(seed, &[0x5e_ed, i as u64, j as u64]);
+    let (w, h) = model.sample_prior(i, j, &mut rng);
+    let mu = w.matmul_abs(&h).expect("shape");
+    let v = Mat::from_fn(i, j, |r, c| {
+        tweedie_sample(mu.get(r, c) as f64, model.phi as f64, model.beta, &mut rng) as f32
+    });
+    DenseDataset { v, w_true: Some(w), h_true: Some(h) }
+}
+
+/// Poisson-NMF synthetic data (Fig. 2a): K columns, exponential priors.
+pub fn poisson_nmf(i: usize, j: usize, model: &NmfModel, seed: u64) -> DenseDataset {
+    assert_eq!(model.beta, 1.0, "poisson_nmf requires beta = 1");
+    from_model(i, j, model, seed)
+}
+
+/// Compound-Poisson synthetic data (Fig. 2b, β = 0.5).
+pub fn compound_poisson_nmf(i: usize, j: usize, model: &NmfModel, seed: u64) -> DenseDataset {
+    assert!(model.beta > 0.0 && model.beta < 1.0);
+    from_model(i, j, model, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tweedie_sample_means() {
+        let mut rng = Rng::seed_from(1);
+        for &beta in &[0.0f32, 0.5, 1.0, 2.0] {
+            let n = 50_000;
+            let mu = 3.0;
+            let m: f64 = (0..n)
+                .map(|_| tweedie_sample(mu, 1.0, beta, &mut rng))
+                .sum::<f64>()
+                / n as f64;
+            assert!((m - mu).abs() < 0.05 * mu, "beta={beta} mean {m}");
+        }
+    }
+
+    #[test]
+    fn dispersed_poisson_variance() {
+        let mut rng = Rng::seed_from(2);
+        let (mu, phi) = (4.0, 2.0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| tweedie_sample(mu, phi, 1.0, &mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - mu).abs() < 0.05 * mu);
+        assert!((var - phi * mu).abs() < 0.1 * phi * mu, "var {var}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no Tweedie distribution")]
+    fn forbidden_interval_panics() {
+        let mut rng = Rng::seed_from(3);
+        tweedie_sample(1.0, 1.0, 1.5, &mut rng);
+    }
+
+    #[test]
+    fn poisson_nmf_dataset_sane() {
+        let model = NmfModel::poisson(8);
+        let d = poisson_nmf(32, 48, &model, 7);
+        assert_eq!(d.shape(), (32, 48));
+        assert_eq!(d.n(), 32 * 48);
+        // Poisson data: non-negative integers
+        assert!(d.v.as_slice().iter().all(|&v| v >= 0.0 && v.fract() == 0.0));
+        // mean of V ≈ mean of mu = K * E[w] * E[h] = 8 * 1 * 1
+        let mean: f64 = d.v.as_slice().iter().map(|&v| v as f64).sum::<f64>() / d.n() as f64;
+        assert!((mean - 8.0).abs() < 1.0, "{mean}");
+        let w = d.w_true.unwrap();
+        assert_eq!(w.shape(), (32, 8));
+    }
+
+    #[test]
+    fn compound_poisson_dataset_has_zeros() {
+        let model = NmfModel::compound_poisson(2).with_priors(2.0, 2.0);
+        let d = compound_poisson_nmf(64, 64, &model, 8);
+        let zeros = d.v.as_slice().iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 0, "compound Poisson should produce exact zeros");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let model = NmfModel::poisson(4);
+        let a = poisson_nmf(16, 16, &model, 9);
+        let b = poisson_nmf(16, 16, &model, 9);
+        assert_eq!(a.v, b.v);
+        let c = poisson_nmf(16, 16, &model, 10);
+        assert_ne!(a.v, c.v);
+    }
+}

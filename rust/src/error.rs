@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors produced by the PSGLD library.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration or argument validation failure.
+    Config(String),
+    /// Shape mismatch between operands.
+    Shape(String),
+    /// Artifact manifest / runtime errors (missing executable, ...).
+    Runtime(String),
+    /// Underlying XLA/PJRT error.
+    Xla(xla::Error),
+    /// I/O error (artifact files, CSV output, datasets).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[macro_export]
+/// Construct an [`Error::Config`] with format syntax.
+macro_rules! config_err {
+    ($($arg:tt)*) => { $crate::Error::Config(format!($($arg)*)) };
+}
+
+#[macro_export]
+/// Construct an [`Error::Shape`] with format syntax.
+macro_rules! shape_err {
+    ($($arg:tt)*) => { $crate::Error::Shape(format!($($arg)*)) };
+}

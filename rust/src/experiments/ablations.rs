@@ -1,0 +1,161 @@
+//! Ablations over the design choices DESIGN.md §5 calls out:
+//!   1. part schedule: cyclic vs random-shift vs random-perm;
+//!   2. mirroring on/off (β = 2, where both are well-defined);
+//!   3. Langevin noise on/off (PSGLD vs DSGD posterior spread);
+//!   4. grid size B sensitivity at fixed data;
+//!   5. backend: native stripes vs batched-HLO dispatch per-iteration
+//!      cost.
+
+use std::time::Instant;
+
+use crate::config::{RunConfig, StepSchedule};
+use crate::coordinator::HloPsgld;
+use crate::data::synth;
+use crate::experiments::common::{fmt_s, print_table, ExpOptions};
+use crate::model::NmfModel;
+use crate::partition::PartSchedule;
+use crate::samplers::{run_sampler, Psgld, Sampler};
+use crate::Result;
+
+pub fn schedule_ablation(opts: &ExpOptions) -> Result<()> {
+    let model = NmfModel::poisson(16);
+    let data = synth::poisson_nmf(128, 128, &model, opts.seed);
+    let t = opts.t(500, 5_000);
+    let mut rows = Vec::new();
+    for (name, sched) in [
+        ("cyclic", PartSchedule::Cyclic),
+        ("random_shift", PartSchedule::RandomShift),
+        ("random_perm", PartSchedule::RandomPerm),
+    ] {
+        let run = RunConfig::quick(t)
+            .with_step(StepSchedule::Polynomial { a: 0.002, b: 0.51 })
+            .with_schedule(sched);
+        let mut p = Psgld::new(&data.v, &model, 4, run.clone(), opts.seed);
+        let res = run_sampler(&mut p, &run, |s| model.loglik_dense(&s.w, &s.h(), &data.v));
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.4e}", res.trace.mean_after(t / 2)),
+            fmt_s(res.sampling_seconds),
+        ]);
+    }
+    print_table(
+        "Ablation: part schedule (Condition 2 variants)",
+        &["schedule", "post-burn-in loglik", "time"],
+        &rows,
+    );
+    Ok(())
+}
+
+pub fn mirroring_ablation(opts: &ExpOptions) -> Result<()> {
+    // Gaussian model: mirrored vs free chains both sample; the mirrored
+    // one keeps the state non-negative.
+    let mut model = NmfModel::gaussian(16);
+    model.lam_w = 1.0;
+    model.lam_h = 1.0;
+    let data = synth::from_model(128, 128, &model, opts.seed);
+    let t = opts.t(400, 4_000);
+    let mut rows = Vec::new();
+    for mirror in [true, false] {
+        let mut m = model.clone();
+        m.mirror = mirror;
+        // Gaussian gradients lack the 1/mu damping of the Poisson case
+        // (e grows with mu itself), so the stable step band sits orders
+        // of magnitude lower than the Poisson experiments'.
+        let run = RunConfig::quick(t)
+            .with_step(StepSchedule::Polynomial { a: 1e-7, b: 0.51 });
+        let mut p = Psgld::new(&data.v, &m, 4, run.clone(), opts.seed);
+        let res = run_sampler(&mut p, &run, |s| m.loglik_dense(&s.w, &s.h(), &data.v));
+        let negatives = p
+            .state()
+            .w
+            .as_slice()
+            .iter()
+            .filter(|&&x| x < 0.0)
+            .count();
+        rows.push(vec![
+            if mirror { "mirrored" } else { "free" }.into(),
+            format!("{:.4e}", res.trace.last_value()),
+            negatives.to_string(),
+        ]);
+    }
+    print_table(
+        "Ablation: mirroring step (beta = 2)",
+        &["variant", "final loglik", "negative W entries"],
+        &rows,
+    );
+    Ok(())
+}
+
+pub fn b_sensitivity(opts: &ExpOptions) -> Result<()> {
+    let model = NmfModel::poisson(16);
+    let data = synth::poisson_nmf(128, 128, &model, opts.seed);
+    let t = opts.t(500, 5_000);
+    let mut rows = Vec::new();
+    for b in [2usize, 4, 8, 16, 32] {
+        let run = RunConfig::quick(t)
+            .with_step(StepSchedule::Polynomial { a: 0.002, b: 0.51 });
+        let mut p = Psgld::new(&data.v, &model, b, run.clone(), opts.seed);
+        let res = run_sampler(&mut p, &run, |s| model.loglik_dense(&s.w, &s.h(), &data.v));
+        rows.push(vec![
+            b.to_string(),
+            format!("{:.4e}", res.trace.mean_after(t / 2)),
+            fmt_s(res.sampling_seconds),
+        ]);
+    }
+    print_table(
+        "Ablation: grid size B (128x128, K=16)",
+        &["B", "post-burn-in loglik", "time"],
+        &rows,
+    );
+    println!("  note: per iteration PSGLD touches N/B entries, so larger B is\n  cheaper per iteration but needs B iterations per data sweep.");
+    Ok(())
+}
+
+pub fn backend_ablation(opts: &ExpOptions) -> Result<()> {
+    if !opts.has_artifacts() {
+        println!("  (skipped: run `make artifacts` for the HLO backend)");
+        return Ok(());
+    }
+    let model = NmfModel::poisson(16);
+    let data = synth::poisson_nmf(128, 128, &model, opts.seed);
+    let t = opts.t(200, 2_000);
+    let run = RunConfig::quick(t)
+        .with_step(StepSchedule::Polynomial { a: 0.002, b: 0.51 });
+
+    let mut native = Psgld::new(&data.v, &model, 4, run.clone(), opts.seed);
+    let tick = Instant::now();
+    for i in 1..=t {
+        native.step(i);
+    }
+    let native_s = tick.elapsed().as_secs_f64();
+
+    let mut hlo = HloPsgld::new(&opts.artifacts, &data.v, &model, 4, run.clone(), opts.seed)?;
+    hlo.step(1); // absorb compile cost outside the timed loop
+    let tick = Instant::now();
+    for i in 2..=t {
+        hlo.step(i);
+    }
+    let hlo_s = tick.elapsed().as_secs_f64();
+
+    print_table(
+        "Ablation: update backend (128x128, K=16, B=4)",
+        &["backend", "time", "per-iteration"],
+        &[
+            vec!["native stripes".into(), fmt_s(native_s), fmt_s(native_s / t as f64)],
+            vec![
+                "batched HLO".into(),
+                fmt_s(hlo_s),
+                fmt_s(hlo_s / (t - 1) as f64),
+            ],
+        ],
+    );
+    Ok(())
+}
+
+pub fn run_all(opts: &ExpOptions) -> Result<()> {
+    schedule_ablation(opts)?;
+    mirroring_ablation(opts)?;
+    b_sensitivity(opts)?;
+    backend_ablation(opts)?;
+    Ok(())
+}

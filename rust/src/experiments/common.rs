@@ -1,0 +1,121 @@
+//! Shared experiment plumbing: options, output handling and the table
+//! printer used by every figure harness.
+
+use std::path::{Path, PathBuf};
+
+use crate::metrics::Trace;
+use crate::Result;
+
+/// Options shared by every experiment harness.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// Output directory for CSVs.
+    pub outdir: PathBuf,
+    /// Artifacts directory (HLO executables).
+    pub artifacts: PathBuf,
+    /// Master seed.
+    pub seed: u64,
+    /// Run at the paper's full scale (hours) instead of the scaled-down
+    /// default (minutes).
+    pub full: bool,
+    /// Override for the iteration count (None = harness default).
+    pub iters: Option<u64>,
+    /// Include the Gibbs comparator at large sizes (slow).
+    pub gibbs: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            outdir: PathBuf::from("results"),
+            artifacts: PathBuf::from("artifacts"),
+            seed: 2015,
+            full: false,
+            iters: None,
+            gibbs: true,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Iteration count: explicit override, else `full_iters` when
+    /// `--full`, else the scaled default.
+    pub fn t(&self, default_iters: u64, full_iters: u64) -> u64 {
+        self.iters.unwrap_or(if self.full { full_iters } else { default_iters })
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.outdir.join(name)
+    }
+
+    /// True when the AOT artifacts are present (HLO-backed runs).
+    pub fn has_artifacts(&self) -> bool {
+        self.artifacts.join("manifest.json").exists()
+    }
+}
+
+/// Print an aligned two-column-plus table, paper-style.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("  {}", s.trim_end());
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}
+
+/// Write a set of traces as one CSV and report where.
+pub fn save_traces(path: &Path, traces: &[&Trace]) -> Result<()> {
+    crate::metrics::trace::write_csv_multi(traces, path)?;
+    println!("  wrote {}", path.display());
+    Ok(())
+}
+
+/// Seconds formatted compactly.
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t_selection() {
+        let mut o = ExpOptions::default();
+        assert_eq!(o.t(100, 10_000), 100);
+        o.full = true;
+        assert_eq!(o.t(100, 10_000), 10_000);
+        o.iters = Some(42);
+        assert_eq!(o.t(100, 10_000), 42);
+    }
+
+    #[test]
+    fn fmt_s_ranges() {
+        assert!(fmt_s(5e-4).ends_with("us"));
+        assert!(fmt_s(0.02).ends_with("ms"));
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert!(fmt_s(300.0).ends_with("min"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment harnesses — one per table/figure of the paper's
+//! evaluation (§4), regenerating the same series/rows at configurable
+//! scale. Each writes CSVs under an output directory and prints the
+//! summary lines the paper reports. See DESIGN.md §5 for the index.
+
+pub mod ablations;
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+
+pub use common::ExpOptions;

@@ -1,0 +1,15 @@
+//! Native (pure-Rust) compute kernels: the block gradient + SGLD update
+//! hot path used by the shared-memory samplers, the sparse (MovieLens)
+//! path, and the cluster simulator's full-fidelity mode.
+//!
+//! The HLO/Pallas path (`runtime`) covers the dense batched part update;
+//! these natives must agree with it numerically (see
+//! `rust/tests/runtime_roundtrip.rs`).
+
+pub mod native;
+
+pub use native::{
+    dense_block_grads, grads_dense_core, grads_sparse_core, sgd_apply,
+    sgd_apply_core, sgld_apply, sgld_apply_core, sign0, sparse_block_grads,
+    BlockGrads,
+};

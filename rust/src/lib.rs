@@ -1,0 +1,52 @@
+//! # PSGLD — Parallel Stochastic Gradient MCMC for Matrix Factorisation
+//!
+//! A production reproduction of Şimşekli et al. (2015), *"Parallel
+//! Stochastic Gradient Markov Chain Monte Carlo for Matrix Factorisation
+//! Models"*, as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: grid
+//!   partitioning of the observed matrix, part scheduling, the parallel
+//!   block-SGLD driver, a discrete-event cluster simulator implementing
+//!   the paper's ring communication mechanism (Fig. 4), all comparator
+//!   samplers (LD, SGLD, Gibbs, DSGD, DSGLD), metrics and the CLI.
+//! * **Layer 2 (python/compile/model.py)** — the Tweedie-NMF update
+//!   rules in JAX, AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — the Pallas β-divergence
+//!   gradient kernel the L2 functions call.
+//!
+//! The compiled artifacts in `artifacts/` are loaded at runtime through
+//! [`runtime`] (PJRT CPU via the `xla` crate); Python never runs on the
+//! sampling path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use psgld::config::{ModelConfig, RunConfig};
+//! use psgld::data::synth;
+//! use psgld::samplers::Psgld;
+//!
+//! let model = ModelConfig::poisson(16);
+//! let data = synth::poisson_nmf(128, 128, &model, 7);
+//! let run = RunConfig::quick(200);
+//! let mut sampler = Psgld::new(&data.v, &model, 4, run.clone(), 42);
+//! let result = sampler.run(&run);
+//! println!("final loglik = {}", result.trace.last_value());
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+pub mod samplers;
+
+pub use error::{Error, Result};

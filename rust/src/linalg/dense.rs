@@ -1,0 +1,311 @@
+//! Row-major `f32` dense matrix with the handful of operations the
+//! samplers need. The GEMM uses an `i-k-j` loop order so the inner loop
+//! streams both `B`'s row and `C`'s row — auto-vectorises to FMA on
+//! every target we care about.
+
+use crate::rng::{Dist, Rng};
+use crate::{Error, Result};
+
+/// Row-major dense `f32` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing buffer (must have `rows * cols` elements).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer len {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// I.i.d. Exponential(rate) entries — the model's prior draw.
+    pub fn exponential(rows: usize, cols: usize, rate: f64, rng: &mut Rng) -> Self {
+        Mat::from_fn(rows, cols, |_, _| rng.exponential(rate) as f32)
+    }
+
+    /// I.i.d. Uniform(lo, hi) entries.
+    pub fn uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        Mat::from_fn(rows, cols, |_, _| rng.uniform(lo as f64, hi as f64) as f32)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable contiguous row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw data (row-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// `C = |self| @ |other|` — the model's mean map `mu = |W||H|`.
+    pub fn matmul_abs(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut c = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let c_row = c.row_mut(i);
+            for (k, &a) in a_row.iter().enumerate() {
+                let a = a.abs();
+                let b_row = other.row(k);
+                for (cj, &b) in c_row.iter_mut().zip(b_row.iter()) {
+                    *cj += a * b.abs();
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    /// Plain `C = self @ other`.
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut c = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let c_row = c.row_mut(i);
+            for (k, &a) in a_row.iter().enumerate() {
+                let b_row = other.row(k);
+                for (cj, &b) in c_row.iter_mut().zip(b_row.iter()) {
+                    *cj += a * b;
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// In-place `self = |self|` (the mirroring step).
+    pub fn abs_inplace(&mut self) {
+        for x in &mut self.data {
+            *x = x.abs();
+        }
+    }
+
+    /// `self += alpha * other` (elementwise).
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape("axpy shape mismatch".into()));
+        }
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Add i.i.d. N(0, sd^2) noise to every entry.
+    pub fn add_noise(&mut self, sd: f32, rng: &mut Rng) {
+        // buffered fill keeps the hot loop branch-free
+        let mut buf = vec![0f32; self.data.len()];
+        rng.fill_normal_f32(&mut buf, 0.0, sd);
+        for (x, n) in self.data.iter_mut().zip(buf.iter()) {
+            *x += n;
+        }
+    }
+
+    /// Sum of |entries| (for the exponential-prior log density).
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|&x| x.abs() as f64).sum()
+    }
+
+    /// Frobenius distance to `other`.
+    pub fn frob_dist(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Copy a row-range/col-range sub-block into a new matrix.
+    pub fn slice_block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        debug_assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Mat::zeros(r1 - r0, c1 - c0);
+        for (oi, i) in (r0..r1).enumerate() {
+            out.row_mut(oi)
+                .copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `block` back into the row/col range it was sliced from.
+    pub fn write_block(&mut self, r0: usize, c0: usize, block: &Mat) {
+        debug_assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for bi in 0..block.rows {
+            let dst = &mut self.row_mut(r0 + bi)[c0..c0 + block.cols];
+            dst.copy_from_slice(block.row(bi));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_abs_uses_magnitudes() {
+        let a = Mat::from_vec(1, 2, vec![-1.0, 2.0]).unwrap();
+        let b = Mat::from_vec(2, 1, vec![3.0, -4.0]).unwrap();
+        assert_eq!(a.matmul_abs(&b).unwrap().get(0, 0), 11.0);
+        assert_eq!(a.matmul(&b).unwrap().get(0, 0), -11.0);
+    }
+
+    #[test]
+    fn matmul_shape_error() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let a = Mat::uniform(5, 7, -1.0, 1.0, &mut rng);
+        let t = a.transpose();
+        assert_eq!(t.shape(), (7, 5));
+        assert_eq!(t.transpose(), a);
+        assert_eq!(a.get(2, 6), t.get(6, 2));
+    }
+
+    #[test]
+    fn slice_and_write_block_roundtrip() {
+        let mut rng = Rng::seed_from(2);
+        let a = Mat::uniform(8, 8, 0.0, 1.0, &mut rng);
+        let blk = a.slice_block(2, 6, 4, 8);
+        assert_eq!(blk.shape(), (4, 4));
+        assert_eq!(blk.get(0, 0), a.get(2, 4));
+        let mut b = Mat::zeros(8, 8);
+        b.write_block(2, 4, &blk);
+        assert_eq!(b.get(5, 7), a.get(5, 7));
+        assert_eq!(b.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn mirroring_abs() {
+        let mut a = Mat::from_vec(1, 3, vec![-1.5, 0.0, 2.0]).unwrap();
+        a.abs_inplace();
+        assert_eq!(a.as_slice(), &[1.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn noise_moments() {
+        let mut rng = Rng::seed_from(3);
+        let mut a = Mat::zeros(300, 300);
+        a.add_noise(0.5, &mut rng);
+        let n = (300 * 300) as f64;
+        let mean: f64 = a.as_slice().iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var: f64 =
+            a.as_slice().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.01);
+        assert!((var - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn exponential_init_positive() {
+        let mut rng = Rng::seed_from(4);
+        let a = Mat::exponential(10, 10, 2.0, &mut rng);
+        assert!(a.as_slice().iter().all(|&x| x > 0.0));
+        let mean: f32 = a.as_slice().iter().sum::<f32>() / 100.0;
+        assert!((mean - 0.5).abs() < 0.2, "{mean}");
+    }
+}

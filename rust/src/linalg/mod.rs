@@ -1,0 +1,9 @@
+//! Dense linear algebra substrate: row-major `f32` matrices, a cache-
+//! tiled GEMM, and the stacked-block containers the coordinator feeds
+//! to the batched HLO part update.
+
+pub mod dense;
+pub mod stacked;
+
+pub use dense::Mat;
+pub use stacked::StackedBlocks;

@@ -1,0 +1,191 @@
+//! Stacked block tensors `[B, r, c]` — the layout the batched HLO
+//! part-update executable consumes. Keeping factor blocks stacked (and
+//! the data blocks pre-stacked per part at setup) makes one iteration a
+//! single PJRT dispatch plus two cheap permuted copies.
+
+use crate::linalg::Mat;
+use crate::{Error, Result};
+
+/// Contiguous stack of `b` equally-shaped `rows x cols` f32 blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StackedBlocks {
+    b: usize,
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl StackedBlocks {
+    pub fn zeros(b: usize, rows: usize, cols: usize) -> Self {
+        StackedBlocks { b, rows, cols, data: vec![0.0; b * rows * cols] }
+    }
+
+    /// Stack copies of the given blocks (all must share a shape).
+    pub fn from_blocks(blocks: &[Mat]) -> Result<Self> {
+        let first = blocks
+            .first()
+            .ok_or_else(|| Error::Shape("empty block list".into()))?;
+        let (rows, cols) = first.shape();
+        let mut out = StackedBlocks::zeros(blocks.len(), rows, cols);
+        for (i, blk) in blocks.iter().enumerate() {
+            if blk.shape() != (rows, cols) {
+                return Err(Error::Shape(format!(
+                    "block {i} shape {:?} != {:?}",
+                    blk.shape(),
+                    (rows, cols)
+                )));
+            }
+            out.block_mut(i).copy_from_slice(blk.as_slice());
+        }
+        Ok(out)
+    }
+
+    /// Re-assemble a full matrix from row-stripe blocks `[B, m, c]`
+    /// stacked in stripe order (the W layout).
+    pub fn to_row_stripes(&self) -> Mat {
+        let mut m = Mat::zeros(self.b * self.rows, self.cols);
+        for bi in 0..self.b {
+            for r in 0..self.rows {
+                let dst = m.row_mut(bi * self.rows + r);
+                dst.copy_from_slice(self.block_row(bi, r));
+            }
+        }
+        m
+    }
+
+    /// Re-assemble a full matrix from column-stripe blocks `[B, r, n]`
+    /// stacked in stripe order (the H layout: block b holds columns
+    /// `b*n .. (b+1)*n`).
+    pub fn to_col_stripes(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.b * self.cols);
+        for bi in 0..self.b {
+            for r in 0..self.rows {
+                let src = self.block_row(bi, r);
+                m.row_mut(r)[bi * self.cols..(bi + 1) * self.cols]
+                    .copy_from_slice(src);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    #[inline]
+    pub fn block_shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn dims(&self) -> [usize; 3] {
+        [self.b, self.rows, self.cols]
+    }
+
+    #[inline]
+    pub fn block(&self, i: usize) -> &[f32] {
+        let sz = self.rows * self.cols;
+        &self.data[i * sz..(i + 1) * sz]
+    }
+
+    #[inline]
+    pub fn block_mut(&mut self, i: usize) -> &mut [f32] {
+        let sz = self.rows * self.cols;
+        &mut self.data[i * sz..(i + 1) * sz]
+    }
+
+    #[inline]
+    pub fn block_row(&self, i: usize, r: usize) -> &[f32] {
+        let base = i * self.rows * self.cols + r * self.cols;
+        &self.data[base..base + self.cols]
+    }
+
+    /// View block `i` as a [`Mat`] copy.
+    pub fn block_mat(&self, i: usize) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.block(i).to_vec()).unwrap()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Gather into `out`: `out.block[b] = self.block[perm[b]]`.
+    /// Used to align H column-stripes with the current part's diagonal.
+    pub fn gather_perm_into(&self, perm: &[usize], out: &mut StackedBlocks) {
+        debug_assert_eq!(perm.len(), self.b);
+        debug_assert_eq!(out.dims(), self.dims());
+        let sz = self.rows * self.cols;
+        for (b, &src) in perm.iter().enumerate() {
+            out.data[b * sz..(b + 1) * sz]
+                .copy_from_slice(&self.data[src * sz..(src + 1) * sz]);
+        }
+    }
+
+    /// Scatter from `other`: `self.block[perm[b]] = other.block[b]`
+    /// (inverse of [`Self::gather_perm_into`]).
+    pub fn scatter_perm_from(&mut self, perm: &[usize], other: &StackedBlocks) {
+        debug_assert_eq!(perm.len(), self.b);
+        let sz = self.rows * self.cols;
+        for (b, &dst) in perm.iter().enumerate() {
+            self.data[dst * sz..(dst + 1) * sz]
+                .copy_from_slice(&other.data[b * sz..(b + 1) * sz]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn stack_and_unstack_row_stripes() {
+        let mut rng = Rng::seed_from(1);
+        let full = Mat::uniform(8, 4, 0.0, 1.0, &mut rng);
+        let blocks: Vec<Mat> =
+            (0..4).map(|b| full.slice_block(b * 2, (b + 1) * 2, 0, 4)).collect();
+        let stacked = StackedBlocks::from_blocks(&blocks).unwrap();
+        assert_eq!(stacked.dims(), [4, 2, 4]);
+        assert_eq!(stacked.to_row_stripes(), full);
+    }
+
+    #[test]
+    fn stack_and_unstack_col_stripes() {
+        let mut rng = Rng::seed_from(2);
+        let full = Mat::uniform(3, 8, 0.0, 1.0, &mut rng);
+        let blocks: Vec<Mat> =
+            (0..4).map(|b| full.slice_block(0, 3, b * 2, (b + 1) * 2)).collect();
+        let stacked = StackedBlocks::from_blocks(&blocks).unwrap();
+        assert_eq!(stacked.to_col_stripes(), full);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut rng = Rng::seed_from(3);
+        let blocks: Vec<Mat> =
+            (0..4).map(|_| Mat::uniform(2, 3, 0.0, 1.0, &mut rng)).collect();
+        let orig = StackedBlocks::from_blocks(&blocks).unwrap();
+        let perm = [2usize, 0, 3, 1];
+        let mut gathered = StackedBlocks::zeros(4, 2, 3);
+        orig.gather_perm_into(&perm, &mut gathered);
+        for b in 0..4 {
+            assert_eq!(gathered.block(b), orig.block(perm[b]));
+        }
+        let mut restored = StackedBlocks::zeros(4, 2, 3);
+        restored.scatter_perm_from(&perm, &gathered);
+        assert_eq!(restored, orig);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let blocks = vec![Mat::zeros(2, 2), Mat::zeros(2, 3)];
+        assert!(StackedBlocks::from_blocks(&blocks).is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! `psgld` — CLI launcher for the PSGLD reproduction.
+//!
+//! One subcommand per experiment in DESIGN.md §5 (clap is unavailable
+//! offline, so argument parsing is hand-rolled; `psgld help` documents
+//! everything).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use psgld::experiments::{ablations, fig2, fig3, fig5, fig6, ExpOptions};
+
+const HELP: &str = "\
+psgld — Parallel Stochastic Gradient MCMC for Matrix Factorisation
+(Şimşekli et al., 2015 reproduction)
+
+USAGE:
+    psgld <COMMAND> [OPTIONS]
+
+COMMANDS:
+    quickstart        tiny end-to-end PSGLD run (native + HLO backends)
+    fig2a             Poisson-NMF mixing + runtimes (Gibbs/LD/SGLD/PSGLD)
+    fig2b             compound-Poisson mixing + runtimes (LD/SGLD/PSGLD)
+    fig3              audio spectrogram decomposition (PSGLD/LD/Gibbs)
+    fig5              MovieLens RMSE: PSGLD vs DSGD (sparse, B=15, K=50)
+    fig6a             strong scaling on the simulated cluster (5..120 nodes)
+    fig6b             weak scaling (data x4 & nodes x2 per step)
+    comm              DSGLD-vs-PSGLD communication comparison (§1 claim)
+    ablations         schedule / mirroring / B / backend ablations
+    all               every experiment in sequence
+    help              this text
+
+OPTIONS:
+    --out DIR         output directory for CSVs        [results]
+    --artifacts DIR   AOT artifact directory           [artifacts]
+    --seed N          master RNG seed                  [2015]
+    --iters N         override iteration count
+    --full            paper-scale runs (hours, not minutes)
+    --no-gibbs        skip the Gibbs comparator
+
+EXAMPLES:
+    psgld quickstart
+    psgld fig2a --iters 1000
+    psgld fig5 --full --out results/full
+";
+
+fn parse_opts(args: &[String]) -> Result<ExpOptions, String> {
+    let mut opts = ExpOptions::default();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--out" => {
+                opts.outdir = PathBuf::from(
+                    it.next().ok_or_else(|| "--out needs a value".to_string())?,
+                )
+            }
+            "--artifacts" => {
+                opts.artifacts = PathBuf::from(
+                    it.next().ok_or_else(|| "--artifacts needs a value".to_string())?,
+                )
+            }
+            "--seed" => {
+                opts.seed = it
+                    .next()
+                    .ok_or_else(|| "--seed needs a value".to_string())?
+                    .parse()
+                    .map_err(|e| format!("bad --seed: {e}"))?
+            }
+            "--iters" => {
+                opts.iters = Some(
+                    it.next()
+                        .ok_or_else(|| "--iters needs a value".to_string())?
+                        .parse()
+                        .map_err(|e| format!("bad --iters: {e}"))?,
+                )
+            }
+            "--full" => opts.full = true,
+            "--no-gibbs" => opts.gibbs = false,
+            other => return Err(format!("unknown option '{other}'")),
+        }
+    }
+    Ok(opts)
+}
+
+fn quickstart(opts: &ExpOptions) -> psgld::Result<()> {
+    use psgld::config::{RunConfig, StepSchedule};
+    use psgld::coordinator::HloPsgld;
+    use psgld::data::synth;
+    use psgld::model::NmfModel;
+    use psgld::samplers::{run_sampler, Psgld};
+
+    println!("PSGLD quickstart: 128x128 Poisson-NMF, K=16, B=4");
+    let model = NmfModel::poisson(16);
+    let data = synth::poisson_nmf(128, 128, &model, opts.seed);
+    let t = opts.t(400, 2_000);
+    let run = RunConfig::quick(t)
+        .with_step(StepSchedule::Polynomial { a: 0.002, b: 0.51 });
+
+    let mut native = Psgld::new(&data.v, &model, 4, run.clone(), opts.seed);
+    let res = run_sampler(&mut native, &run, |s| {
+        model.loglik_dense(&s.w, &s.h(), &data.v)
+    });
+    println!(
+        "  native : loglik {:.4e} -> {:.4e} in {:.2}s ({} samples, {} post-burn-in)",
+        res.trace.values[0],
+        res.trace.last_value(),
+        res.sampling_seconds,
+        t,
+        res.posterior.count(),
+    );
+
+    if opts.has_artifacts() {
+        let mut hlo =
+            HloPsgld::new(&opts.artifacts, &data.v, &model, 4, run.clone(), opts.seed)?;
+        let res = run_sampler(&mut hlo, &run, |s| {
+            model.loglik_dense(&s.w, &s.h(), &data.v)
+        });
+        println!(
+            "  hlo    : loglik {:.4e} -> {:.4e} in {:.2}s (one PJRT dispatch/iter)",
+            res.trace.values[0],
+            res.trace.last_value(),
+            res.sampling_seconds,
+        );
+    } else {
+        println!("  (HLO backend skipped: run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn dispatch(cmd: &str, opts: &ExpOptions) -> psgld::Result<()> {
+    std::fs::create_dir_all(&opts.outdir)?;
+    match cmd {
+        "quickstart" => quickstart(opts)?,
+        "fig2a" => {
+            fig2::fig2a(opts)?;
+        }
+        "fig2b" => {
+            fig2::fig2b(opts)?;
+        }
+        "fig3" => {
+            fig3::fig3(opts)?;
+        }
+        "fig5" => {
+            fig5::fig5(opts)?;
+        }
+        "fig6a" => {
+            fig6::fig6a(opts)?;
+        }
+        "fig6b" => {
+            fig6::fig6b(opts)?;
+        }
+        "comm" => fig6::comm_comparison(opts)?,
+        "ablations" => ablations::run_all(opts)?,
+        "all" => {
+            quickstart(opts)?;
+            fig2::fig2a(opts)?;
+            fig2::fig2b(opts)?;
+            fig3::fig3(opts)?;
+            fig5::fig5(opts)?;
+            fig6::fig6a(opts)?;
+            fig6::fig6b(opts)?;
+            fig6::comm_comparison(opts)?;
+            ablations::run_all(opts)?;
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        println!("{HELP}");
+        return ExitCode::from(2);
+    };
+    if cmd == "help" || cmd == "--help" || cmd == "-h" {
+        println!("{HELP}");
+        return ExitCode::SUCCESS;
+    }
+    let opts = match parse_opts(&args[1..]) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            return ExitCode::from(2);
+        }
+    };
+    match dispatch(cmd, &opts) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! MCMC convergence diagnostics: autocorrelation, Geweke's equality-of-
+//! means test and the Gelman-Rubin potential scale reduction factor
+//! (R̂) over parallel chains — the tooling a practitioner needs to
+//! trust the sampler's output (the paper argues samplers beat point
+//! estimates *because* they quantify uncertainty; these make that
+//! quantification auditable).
+
+/// Sample autocorrelation of `values` at lags `0..=max_lag`.
+pub fn autocorrelation(values: &[f64], max_lag: usize) -> Vec<f64> {
+    let n = values.len();
+    if n < 2 {
+        return vec![1.0];
+    }
+    let mean = values.iter().sum::<f64>() / n as f64;
+    let var: f64 = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    let max_lag = max_lag.min(n - 1);
+    (0..=max_lag)
+        .map(|lag| {
+            if var == 0.0 {
+                return if lag == 0 { 1.0 } else { 0.0 };
+            }
+            let mut s = 0.0;
+            for i in 0..n - lag {
+                s += (values[i] - mean) * (values[i + lag] - mean);
+            }
+            s / (n as f64 * var)
+        })
+        .collect()
+}
+
+/// Integrated autocorrelation time via Geyer's initial positive
+/// sequence (matches `SummaryStats::ess`: ESS = n / tau).
+pub fn integrated_autocorr_time(values: &[f64]) -> f64 {
+    let acf = autocorrelation(values, values.len() / 2);
+    let mut tau = 1.0;
+    let mut lag = 1;
+    while lag + 1 < acf.len() {
+        let pair = acf[lag] + acf[lag + 1];
+        if pair <= 0.0 {
+            break;
+        }
+        tau += 2.0 * pair;
+        lag += 2;
+    }
+    tau
+}
+
+/// Geweke (1992) diagnostic: z-score comparing the mean of the first
+/// `frac_a` of the chain with the last `frac_b`, using spectral-density
+/// variance estimates (here: batch means, adequate for monitoring).
+/// |z| > 2 suggests the chain has not converged.
+pub fn geweke_z(values: &[f64], frac_a: f64, frac_b: f64) -> f64 {
+    let n = values.len();
+    if n < 20 {
+        return f64::NAN;
+    }
+    let na = ((n as f64 * frac_a) as usize).max(5);
+    let nb = ((n as f64 * frac_b) as usize).max(5);
+    let a = &values[..na];
+    let b = &values[n - nb..];
+    let mv = |x: &[f64]| {
+        let m = x.iter().sum::<f64>() / x.len() as f64;
+        // batch-means variance of the mean
+        let nbatch = (x.len() as f64).sqrt() as usize;
+        let bs = x.len() / nbatch.max(1);
+        let means: Vec<f64> = x
+            .chunks(bs.max(1))
+            .filter(|c| c.len() == bs)
+            .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+            .collect();
+        let bm = means.iter().sum::<f64>() / means.len() as f64;
+        let bv = means.iter().map(|v| (v - bm) * (v - bm)).sum::<f64>()
+            / means.len().max(2) as f64;
+        (m, bv / means.len() as f64)
+    };
+    let (ma, va) = mv(a);
+    let (mb, vb) = mv(b);
+    (ma - mb) / (va + vb).sqrt().max(1e-300)
+}
+
+/// Gelman-Rubin potential scale reduction factor R̂ over ≥2 chains
+/// (split-free classic form). Values near 1 indicate convergence;
+/// > 1.1 is the usual alarm threshold.
+pub fn gelman_rubin(chains: &[Vec<f64>]) -> f64 {
+    let m = chains.len();
+    assert!(m >= 2, "R-hat needs at least two chains");
+    let n = chains.iter().map(|c| c.len()).min().expect("chains");
+    assert!(n >= 4, "chains too short for R-hat");
+    let chains: Vec<&[f64]> = chains.iter().map(|c| &c[c.len() - n..]).collect();
+    let means: Vec<f64> = chains
+        .iter()
+        .map(|c| c.iter().sum::<f64>() / n as f64)
+        .collect();
+    let grand = means.iter().sum::<f64>() / m as f64;
+    // between-chain variance
+    let b = n as f64 / (m as f64 - 1.0)
+        * means.iter().map(|mu| (mu - grand) * (mu - grand)).sum::<f64>();
+    // within-chain variance
+    let w = chains
+        .iter()
+        .zip(&means)
+        .map(|(c, mu)| {
+            c.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / (n as f64 - 1.0)
+        })
+        .sum::<f64>()
+        / m as f64;
+    if w == 0.0 {
+        return 1.0;
+    }
+    let var_plus = (n as f64 - 1.0) / n as f64 * w + b / n as f64;
+    (var_plus / w).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Dist, Rng};
+
+    fn iid(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn ar1(seed: u64, n: usize, rho: f64) -> Vec<f64> {
+        let mut rng = Rng::seed_from(seed);
+        let mut x = 0.0;
+        (0..n)
+            .map(|_| {
+                x = rho * x + (1.0 - rho * rho).sqrt() * rng.normal();
+                x
+            })
+            .collect()
+    }
+
+    #[test]
+    fn acf_lag0_is_one_and_iid_decays() {
+        let v = iid(1, 5000);
+        let acf = autocorrelation(&v, 10);
+        assert!((acf[0] - 1.0).abs() < 1e-12);
+        for lag in 1..=10 {
+            assert!(acf[lag].abs() < 0.05, "lag {lag}: {}", acf[lag]);
+        }
+    }
+
+    #[test]
+    fn acf_matches_ar1_theory() {
+        let rho: f64 = 0.8;
+        let v = ar1(2, 50_000, rho);
+        let acf = autocorrelation(&v, 5);
+        for lag in 1..=5 {
+            let expect = rho.powi(lag as i32);
+            assert!(
+                (acf[lag as usize] - expect).abs() < 0.05,
+                "lag {lag}: {} vs {expect}",
+                acf[lag as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn iat_iid_near_one_ar1_large() {
+        assert!((integrated_autocorr_time(&iid(3, 10_000)) - 1.0).abs() < 0.3);
+        let tau = integrated_autocorr_time(&ar1(4, 20_000, 0.9));
+        // theory: (1+rho)/(1-rho) = 19
+        assert!((10.0..30.0).contains(&tau), "{tau}");
+    }
+
+    #[test]
+    fn geweke_flags_trend_not_stationary() {
+        let stationary = iid(5, 4000);
+        let z = geweke_z(&stationary, 0.1, 0.5);
+        assert!(z.abs() < 3.0, "{z}");
+        let trending: Vec<f64> = (0..4000).map(|i| i as f64 * 0.01).collect();
+        let z = geweke_z(&trending, 0.1, 0.5);
+        assert!(z.abs() > 5.0, "{z}");
+    }
+
+    #[test]
+    fn rhat_near_one_for_same_target() {
+        let chains = vec![iid(6, 3000), iid(7, 3000), iid(8, 3000)];
+        let r = gelman_rubin(&chains);
+        assert!(r < 1.05, "{r}");
+    }
+
+    #[test]
+    fn rhat_large_for_disagreeing_chains() {
+        let mut a = iid(9, 2000);
+        let b: Vec<f64> = iid(10, 2000).iter().map(|v| v + 5.0).collect();
+        let r = gelman_rubin(&[std::mem::take(&mut a), b]);
+        assert!(r > 1.5, "{r}");
+    }
+
+    #[test]
+    fn rhat_constant_chains() {
+        assert_eq!(gelman_rubin(&[vec![1.0; 10], vec![1.0; 10]]), 1.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Monitoring: traces (value vs iteration vs wall/virtual time), RMSE
+//! and log-likelihood monitors, effective sample size, and CSV output
+//! for the figure harnesses.
+
+pub mod diagnostics;
+pub mod trace;
+
+pub use diagnostics::{autocorrelation, gelman_rubin, geweke_z};
+pub use trace::{SummaryStats, Trace};
+
+use crate::data::sparse::Csr;
+use crate::linalg::Mat;
+use crate::model::tweedie;
+
+/// RMSE between a dense V and |W||H| (Fig. 5's monitored quantity).
+pub fn rmse_dense(w: &Mat, h: &Mat, v: &Mat) -> f64 {
+    let mu = w.matmul_abs(h).expect("shape");
+    let n = v.as_slice().len() as f64;
+    let ss: f64 = v
+        .as_slice()
+        .iter()
+        .zip(mu.as_slice())
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum();
+    (ss / n).sqrt()
+}
+
+/// RMSE over the observed entries of a sparse V.
+pub fn rmse_sparse(w: &Mat, h: &Mat, v: &Csr) -> f64 {
+    let k = w.cols();
+    debug_assert_eq!(h.rows(), k);
+    let ht = h.transpose(); // cols x k, contiguous per column of H
+    let mut ss = 0.0f64;
+    for i in 0..v.rows() {
+        let wrow = w.row(i);
+        for (j, val) in v.row(i) {
+            let hrow = ht.row(j as usize);
+            let mut mu = 0f32;
+            for kk in 0..k {
+                mu += wrow[kk].abs() * hrow[kk].abs();
+            }
+            let d = (val - mu) as f64;
+            ss += d * d;
+        }
+    }
+    (ss / v.nnz() as f64).sqrt()
+}
+
+/// Unnormalised Tweedie log-likelihood over observed sparse entries.
+pub fn loglik_sparse(w: &Mat, h: &Mat, v: &Csr, beta: f32, phi: f32) -> f64 {
+    let k = w.cols();
+    let ht = h.transpose();
+    let mut ll = 0.0f64;
+    for i in 0..v.rows() {
+        let wrow = w.row(i);
+        for (j, val) in v.row(i) {
+            let hrow = ht.row(j as usize);
+            let mut mu = 0f32;
+            for kk in 0..k {
+                mu += wrow[kk].abs() * hrow[kk].abs();
+            }
+            ll += tweedie::loglik_entry(val, mu + tweedie::MU_EPS, beta, phi) as f64;
+        }
+    }
+    ll
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rmse_dense_zero_at_exact() {
+        let mut rng = Rng::seed_from(1);
+        let w = Mat::uniform(8, 3, 0.0, 1.0, &mut rng);
+        let h = Mat::uniform(3, 8, 0.0, 1.0, &mut rng);
+        let v = w.matmul_abs(&h).unwrap();
+        assert!(rmse_dense(&w, &h, &v) < 1e-6);
+    }
+
+    #[test]
+    fn rmse_sparse_matches_dense_on_full_pattern() {
+        let mut rng = Rng::seed_from(2);
+        let w = Mat::uniform(6, 2, 0.0, 1.0, &mut rng);
+        let h = Mat::uniform(2, 5, 0.0, 1.0, &mut rng);
+        let v = Mat::uniform(6, 5, 0.0, 2.0, &mut rng);
+        let mut trip: Vec<(u32, u32, f32)> = Vec::new();
+        for i in 0..6 {
+            for j in 0..5 {
+                trip.push((i as u32, j as u32, v.get(i, j)));
+            }
+        }
+        let csr = Csr::from_triplets(6, 5, &mut trip).unwrap();
+        let a = rmse_dense(&w, &h, &v);
+        let b = rmse_sparse(&w, &h, &csr);
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn loglik_sparse_matches_dense_model() {
+        use crate::model::NmfModel;
+        let mut rng = Rng::seed_from(3);
+        let model = NmfModel::poisson(2);
+        let w = Mat::uniform(5, 2, 0.1, 1.0, &mut rng);
+        let h = Mat::uniform(2, 4, 0.1, 1.0, &mut rng);
+        let v = Mat::from_fn(5, 4, |i, j| ((i + j) % 3) as f32);
+        let mut trip: Vec<(u32, u32, f32)> = Vec::new();
+        for i in 0..5 {
+            for j in 0..4 {
+                trip.push((i as u32, j as u32, v.get(i, j)));
+            }
+        }
+        let csr = Csr::from_triplets(5, 4, &mut trip).unwrap();
+        let a = model.loglik_dense(&w, &h, &v);
+        let b = loglik_sparse(&w, &h, &csr, 1.0, 1.0);
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}

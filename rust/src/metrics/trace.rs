@@ -1,0 +1,238 @@
+//! Trace recording (value vs iteration vs time) with CSV output, plus
+//! summary statistics (mean / sd / effective sample size) over the
+//! post-burn-in samples.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::Result;
+
+/// A named series of (iteration, seconds, value) observations.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub name: String,
+    pub iters: Vec<u64>,
+    pub seconds: Vec<f64>,
+    pub values: Vec<f64>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>) -> Self {
+        Trace { name: name.into(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, iter: u64, seconds: f64, value: f64) {
+        self.iters.push(iter);
+        self.seconds.push(seconds);
+        self.values.push(value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn last_value(&self) -> f64 {
+        *self.values.last().expect("empty trace")
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.seconds.last().copied().unwrap_or(0.0)
+    }
+
+    /// Mean of the values recorded strictly after `burn_iters`.
+    pub fn mean_after(&self, burn_iters: u64) -> f64 {
+        let vals: Vec<f64> = self
+            .iters
+            .iter()
+            .zip(&self.values)
+            .filter(|(&it, _)| it > burn_iters)
+            .map(|(_, &v)| v)
+            .collect();
+        if vals.is_empty() {
+            f64::NAN
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    /// First iteration at which the value reaches within `frac` of the
+    /// final plateau (a simple burn-in/mixing-speed indicator).
+    pub fn iters_to_reach(&self, target: f64, higher_is_better: bool) -> Option<u64> {
+        self.iters
+            .iter()
+            .zip(&self.values)
+            .find(|(_, &v)| if higher_is_better { v >= target } else { v <= target })
+            .map(|(&it, _)| it)
+    }
+
+    /// Write `iter,seconds,value` CSV (with a header).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "iter,seconds,{}", self.name)?;
+        for i in 0..self.len() {
+            writeln!(f, "{},{},{}", self.iters[i], self.seconds[i], self.values[i])?;
+        }
+        Ok(())
+    }
+}
+
+/// Write several traces side by side (outer join on iteration).
+pub fn write_csv_multi(traces: &[&Trace], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "iter")?;
+    for t in traces {
+        write!(f, ",{}_seconds,{}_value", t.name, t.name)?;
+    }
+    writeln!(f)?;
+    let rows = traces.iter().map(|t| t.len()).max().unwrap_or(0);
+    for r in 0..rows {
+        let it = traces
+            .iter()
+            .find(|t| r < t.len())
+            .map(|t| t.iters[r])
+            .unwrap_or(r as u64);
+        write!(f, "{it}")?;
+        for t in traces {
+            if r < t.len() {
+                write!(f, ",{},{}", t.seconds[r], t.values[r])?;
+            } else {
+                write!(f, ",,")?;
+            }
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+/// Summary statistics of a scalar MCMC chain.
+#[derive(Clone, Copy, Debug)]
+pub struct SummaryStats {
+    pub mean: f64,
+    pub sd: f64,
+    /// Effective sample size via initial-positive-sequence autocorrelation.
+    pub ess: f64,
+    pub n: usize,
+}
+
+impl SummaryStats {
+    /// Compute over raw chain values.
+    pub fn from_chain(values: &[f64]) -> Self {
+        let n = values.len();
+        if n == 0 {
+            return SummaryStats { mean: f64::NAN, sd: f64::NAN, ess: 0.0, n };
+        }
+        let mean = values.iter().sum::<f64>() / n as f64;
+        let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+        let sd = var.sqrt();
+        if var == 0.0 || n < 4 {
+            return SummaryStats { mean, sd, ess: n as f64, n };
+        }
+        // Geyer initial positive sequence on autocorrelations
+        let max_lag = (n / 2).min(1000);
+        let acf = |lag: usize| -> f64 {
+            let mut s = 0.0;
+            for i in 0..n - lag {
+                s += (values[i] - mean) * (values[i + lag] - mean);
+            }
+            s / (n as f64 * var)
+        };
+        let mut tau = 1.0;
+        let mut lag = 1;
+        while lag + 1 < max_lag {
+            let pair = acf(lag) + acf(lag + 1);
+            if pair <= 0.0 {
+                break;
+            }
+            tau += 2.0 * pair;
+            lag += 2;
+        }
+        SummaryStats { mean, sd, ess: n as f64 / tau, n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Dist, Rng};
+
+    #[test]
+    fn trace_push_and_stats() {
+        let mut t = Trace::new("ll");
+        for i in 0..10u64 {
+            t.push(i, i as f64 * 0.1, i as f64);
+        }
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.last_value(), 9.0);
+        assert!((t.mean_after(4) - 7.0).abs() < 1e-12); // mean of 5..=9
+        assert_eq!(t.iters_to_reach(5.0, true), Some(5));
+        assert_eq!(t.iters_to_reach(100.0, true), None);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("psgld_trace_test");
+        let path = dir.join("t.csv");
+        let mut t = Trace::new("x");
+        t.push(0, 0.0, 1.5);
+        t.push(1, 0.5, 2.5);
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("iter,seconds,x"));
+        assert!(text.contains("1,0.5,2.5"));
+    }
+
+    #[test]
+    fn multi_csv_ragged() {
+        let dir = std::env::temp_dir().join("psgld_trace_test");
+        let path = dir.join("m.csv");
+        let mut a = Trace::new("a");
+        a.push(0, 0.0, 1.0);
+        a.push(1, 1.0, 2.0);
+        let mut b = Trace::new("b");
+        b.push(0, 0.0, 9.0);
+        write_csv_multi(&[&a, &b], &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() == 3);
+        assert!(text.lines().nth(2).unwrap().ends_with(",,"));
+    }
+
+    #[test]
+    fn ess_iid_close_to_n() {
+        let mut rng = Rng::seed_from(1);
+        let vals: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let s = SummaryStats::from_chain(&vals);
+        assert!(s.ess > 1200.0, "iid ess {}", s.ess);
+        assert!(s.mean.abs() < 0.1);
+    }
+
+    #[test]
+    fn ess_correlated_much_smaller() {
+        let mut rng = Rng::seed_from(2);
+        let mut x = 0.0;
+        let vals: Vec<f64> = (0..2000)
+            .map(|_| {
+                x = 0.99 * x + 0.1 * rng.normal();
+                x
+            })
+            .collect();
+        let s = SummaryStats::from_chain(&vals);
+        assert!(s.ess < 300.0, "AR(0.99) ess {}", s.ess);
+    }
+
+    #[test]
+    fn ess_constant_chain() {
+        let s = SummaryStats::from_chain(&[2.0; 50]);
+        assert_eq!(s.ess, 50.0);
+        assert_eq!(s.sd, 0.0);
+    }
+}

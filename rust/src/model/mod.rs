@@ -1,0 +1,8 @@
+//! The probabilistic model: Tweedie observation densities / β-divergence
+//! and the exponential-prior NMF generative model (paper Eq. 13).
+
+pub mod nmf;
+pub mod tweedie;
+
+pub use nmf::NmfModel;
+pub use tweedie::{beta_div, elementwise_weight, MU_EPS};

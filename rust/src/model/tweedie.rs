@@ -1,0 +1,134 @@
+//! Tweedie / β-divergence math — the Rust mirror of
+//! `python/compile/kernels/psgld_grads.py`. The constants and special
+//! cases MUST stay in sync with the Python side: the integration tests
+//! compare native updates against the HLO executables bit-for-bit-ish
+//! (f32 tolerance).
+
+/// Floor added to `mu` everywhere (`beta < 2` divides by powers of mu).
+pub const MU_EPS: f32 = 1e-6;
+
+/// Floor for `v` inside `log(v/mu)` when `beta == 0` (Itakura-Saito).
+pub const V_EPS: f32 = 1e-12;
+
+/// `mu^(beta-2)` with the special cases the paper uses.
+#[inline]
+pub fn elementwise_weight(mu: f32, beta: f32) -> f32 {
+    if beta == 2.0 {
+        1.0
+    } else if beta == 1.0 {
+        1.0 / mu
+    } else if beta == 0.0 {
+        1.0 / (mu * mu)
+    } else {
+        mu.powf(beta - 2.0)
+    }
+}
+
+/// β-divergence `d_beta(v || mu)` (generalises IS / KL / Euclidean).
+#[inline]
+pub fn beta_div(v: f32, mu: f32, beta: f32) -> f32 {
+    if beta == 1.0 {
+        // generalised KL: v log(v/mu) - v + mu, with v=0 -> mu
+        let t = if v > 0.0 { v * (v.max(V_EPS) / mu).ln() } else { 0.0 };
+        t - v + mu
+    } else if beta == 0.0 {
+        // Itakura-Saito: v/mu - log(v/mu) - 1
+        let vs = v.max(V_EPS);
+        vs / mu - (vs / mu).ln() - 1.0
+    } else if beta == 2.0 {
+        0.5 * (v - mu) * (v - mu)
+    } else {
+        v.max(0.0).powf(beta) / (beta * (beta - 1.0)) - v * mu.powf(beta - 1.0) / (beta - 1.0)
+            + mu.powf(beta) / beta
+    }
+}
+
+/// Per-entry unnormalised log-likelihood `-d_beta(v||mu)/phi`.
+#[inline]
+pub fn loglik_entry(v: f32, mu: f32, beta: f32, phi: f32) -> f32 {
+    -beta_div(v, mu, beta) / phi
+}
+
+/// The gradient "error" factor `e = (v - mu) mu^{beta-2} / phi`;
+/// `d loglik / d mu`. Multiply by `d mu / d w = sign(w)|h|` etc.
+#[inline]
+pub fn grad_error(v: f32, mu: f32, beta: f32, phi: f32) -> f32 {
+    (v - mu) * elementwise_weight(mu, beta) / phi
+}
+
+/// Tweedie power parameter `p = 2 - beta` (variance `V(mu) = phi mu^p`).
+#[inline]
+pub fn tweedie_power(beta: f32) -> f32 {
+    2.0 - beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn special_cases_match_generic_limits() {
+        // generic formula at beta close to the special values converges
+        for &(beta, v, mu) in &[(1.0f32, 3.0f32, 2.0f32), (2.0, 3.0, 2.0), (0.0, 3.0, 2.0)] {
+            let exact = beta_div(v, mu, beta);
+            let nearby = beta_div(v, mu, beta + 1e-3);
+            assert!(
+                (exact - nearby).abs() < 0.02 * exact.abs().max(0.1),
+                "beta={beta}: {exact} vs {nearby}"
+            );
+        }
+    }
+
+    #[test]
+    fn divergence_nonnegative_and_zero_at_equality() {
+        for &beta in &[0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0] {
+            for &v in &[0.5f32, 1.0, 4.0] {
+                assert!(beta_div(v, v, beta).abs() < 1e-5, "beta={beta} v={v}");
+                assert!(beta_div(v, 2.0 * v, beta) > 0.0);
+                assert!(beta_div(v, 0.5 * v, beta) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn kl_zero_data() {
+        // v = 0: d = mu for KL
+        assert!((beta_div(0.0, 2.5, 1.0) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_error_sign() {
+        for &beta in &[0.0f32, 0.5, 1.0, 2.0] {
+            assert!(grad_error(3.0, 2.0, beta, 1.0) > 0.0); // v > mu: push up
+            assert!(grad_error(1.0, 2.0, beta, 1.0) < 0.0); // v < mu: push down
+            assert_eq!(grad_error(2.0, 2.0, beta, 1.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn grad_is_derivative_of_loglik() {
+        // finite differences in mu
+        for &beta in &[0.0f32, 0.5, 1.0, 1.5, 2.0] {
+            let (v, mu, h) = (3.0f32, 2.0f32, 1e-3f32);
+            let fd = (loglik_entry(v, mu + h, beta, 1.0) - loglik_entry(v, mu - h, beta, 1.0))
+                / (2.0 * h);
+            let an = grad_error(v, mu, beta, 1.0);
+            assert!((fd - an).abs() < 1e-2 * an.abs().max(0.1), "beta={beta}: {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn phi_scales_inverse() {
+        let a = loglik_entry(3.0, 2.0, 1.0, 1.0);
+        let b = loglik_entry(3.0, 2.0, 1.0, 2.0);
+        assert!((a - 2.0 * b).abs() < 1e-6);
+    }
+
+    #[test]
+    fn power_mapping() {
+        assert_eq!(tweedie_power(1.0), 1.0); // Poisson
+        assert_eq!(tweedie_power(2.0), 0.0); // Gaussian
+        assert_eq!(tweedie_power(0.0), 2.0); // gamma
+        assert_eq!(tweedie_power(0.5), 1.5); // compound Poisson
+    }
+}

@@ -1,0 +1,306 @@
+//! Grid partitioning of the observed matrix into blocks, and part
+//! (generalized-diagonal) scheduling — Definitions 1 & 2 of the paper.
+//!
+//! A `GridPartition` splits `[I]` and `[J]` into `B` contiguous pieces
+//! each. A [`Part`] is a permutation `σ`: block `b` pairs row-stripe `b`
+//! with column-stripe `σ(b)`; all `B` blocks of a part are mutually
+//! disjoint in both dimensions, so their factor updates commute and run
+//! in parallel. The cyclic family `σ_p(b) = (b + p) mod B` gives `B`
+//! non-overlapping parts whose union tiles `V` exactly — satisfying
+//! Condition 2 (each part chosen with probability ∝ its size).
+
+use crate::rng::Rng;
+use crate::{Error, Result};
+
+/// Equal-as-possible contiguous partition of `[I]` and `[J]` into `B`
+/// pieces each, defining the `B×B` block grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridPartition {
+    rows: usize,
+    cols: usize,
+    b: usize,
+    row_bounds: Vec<usize>,
+    col_bounds: Vec<usize>,
+}
+
+fn bounds(n: usize, b: usize) -> Vec<usize> {
+    // piece i gets floor(n/b) + (i < n mod b) elements
+    let base = n / b;
+    let extra = n % b;
+    let mut out = Vec::with_capacity(b + 1);
+    let mut acc = 0;
+    out.push(0);
+    for i in 0..b {
+        acc += base + usize::from(i < extra);
+        out.push(acc);
+    }
+    out
+}
+
+impl GridPartition {
+    /// Create a `B×B` grid over a `rows × cols` matrix.
+    pub fn new(rows: usize, cols: usize, b: usize) -> Result<Self> {
+        if b == 0 || b > rows || b > cols {
+            return Err(Error::Config(format!(
+                "B={b} must be in [1, min(I={rows}, J={cols})]"
+            )));
+        }
+        Ok(GridPartition {
+            rows,
+            cols,
+            b,
+            row_bounds: bounds(rows, b),
+            col_bounds: bounds(cols, b),
+        })
+    }
+
+    #[inline]
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row index range of row-stripe `bi`.
+    #[inline]
+    pub fn row_range(&self, bi: usize) -> std::ops::Range<usize> {
+        self.row_bounds[bi]..self.row_bounds[bi + 1]
+    }
+
+    /// Column index range of column-stripe `bj`.
+    #[inline]
+    pub fn col_range(&self, bj: usize) -> std::ops::Range<usize> {
+        self.col_bounds[bj]..self.col_bounds[bj + 1]
+    }
+
+    /// Shape of block `(bi, bj)`.
+    pub fn block_shape(&self, bi: usize, bj: usize) -> (usize, usize) {
+        (self.row_range(bi).len(), self.col_range(bj).len())
+    }
+
+    /// True iff every block has the same shape (needed for the batched
+    /// HLO dispatch; holds when `B | I` and `B | J`).
+    pub fn uniform_blocks(&self) -> bool {
+        self.rows % self.b == 0 && self.cols % self.b == 0
+    }
+
+    /// Which stripe a row belongs to.
+    pub fn row_stripe_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.rows);
+        match self.row_bounds.binary_search(&i) {
+            Ok(b) => b.min(self.b - 1),
+            Err(ins) => ins - 1,
+        }
+    }
+
+    /// Which stripe a column belongs to.
+    pub fn col_stripe_of(&self, j: usize) -> usize {
+        debug_assert!(j < self.cols);
+        match self.col_bounds.binary_search(&j) {
+            Ok(b) => b.min(self.b - 1),
+            Err(ins) => ins - 1,
+        }
+    }
+
+    /// Number of entries of the part with permutation `perm`.
+    pub fn part_size(&self, part: &Part) -> usize {
+        (0..self.b)
+            .map(|b| self.row_range(b).len() * self.col_range(part.perm[b]).len())
+            .sum()
+    }
+
+    /// `N/|Π|` — the stochastic-gradient bias-correction factor of
+    /// Eqs. 8-9 for a *dense* observed matrix.
+    pub fn scale_dense(&self, part: &Part) -> f32 {
+        (self.rows * self.cols) as f32 / self.part_size(part) as f32
+    }
+}
+
+/// A part: block `b` covers `row_range(b) × col_range(perm[b])`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Part {
+    /// `perm[b]` = column-stripe paired with row-stripe `b`.
+    pub perm: Vec<usize>,
+}
+
+impl Part {
+    /// Cyclic-shift part `σ_p(b) = (b + p) mod B`.
+    pub fn cyclic(b: usize, p: usize) -> Self {
+        Part { perm: (0..b).map(|i| (i + p) % b).collect() }
+    }
+
+    /// Uniformly random permutation part (DSGD-style stratum).
+    pub fn random(b: usize, rng: &mut Rng) -> Self {
+        let mut perm: Vec<usize> = (0..b).collect();
+        for i in (1..b).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            perm.swap(i, j);
+        }
+        Part { perm }
+    }
+
+    /// Check the part law: `perm` is a bijection on `0..B`.
+    pub fn is_valid(&self) -> bool {
+        let b = self.perm.len();
+        let mut seen = vec![false; b];
+        for &p in &self.perm {
+            if p >= b || seen[p] {
+                return false;
+            }
+            seen[p] = true;
+        }
+        true
+    }
+}
+
+/// How the coordinator picks the next part.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartSchedule {
+    /// Deterministic sweep over the `B` cyclic parts (the paper's choice
+    /// in all experiments; satisfies Condition 2 for equal-size parts).
+    Cyclic,
+    /// Uniformly random cyclic shift each iteration (Condition 2 with
+    /// probability ∝ size when stripes are equal).
+    RandomShift,
+    /// Uniformly random permutation (DSGD stratum sampling; ablation —
+    /// the part set is no longer fixed, Condition 2 does not apply).
+    RandomPerm,
+}
+
+/// Stateful part scheduler.
+#[derive(Clone, Debug)]
+pub struct PartScheduler {
+    schedule: PartSchedule,
+    b: usize,
+    next_shift: usize,
+}
+
+impl PartScheduler {
+    pub fn new(schedule: PartSchedule, b: usize) -> Self {
+        PartScheduler { schedule, b, next_shift: 0 }
+    }
+
+    /// Produce the part for the next iteration.
+    pub fn next_part(&mut self, rng: &mut Rng) -> Part {
+        match self.schedule {
+            PartSchedule::Cyclic => {
+                let p = Part::cyclic(self.b, self.next_shift);
+                self.next_shift = (self.next_shift + 1) % self.b;
+                p
+            }
+            PartSchedule::RandomShift => {
+                Part::cyclic(self.b, rng.next_below(self.b as u64) as usize)
+            }
+            PartSchedule::RandomPerm => Part::random(self.b, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_equal_split() {
+        let g = GridPartition::new(9, 12, 3).unwrap();
+        assert_eq!(g.row_range(0), 0..3);
+        assert_eq!(g.row_range(2), 6..9);
+        assert_eq!(g.col_range(1), 4..8);
+        assert!(g.uniform_blocks());
+    }
+
+    #[test]
+    fn bounds_uneven_split_covers_everything() {
+        let g = GridPartition::new(10, 7, 3).unwrap();
+        assert!(!g.uniform_blocks());
+        let total: usize = (0..3).map(|b| g.row_range(b).len()).sum();
+        assert_eq!(total, 10);
+        let sizes: Vec<usize> = (0..3).map(|b| g.row_range(b).len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn invalid_b_rejected() {
+        assert!(GridPartition::new(4, 4, 0).is_err());
+        assert!(GridPartition::new(4, 4, 5).is_err());
+    }
+
+    #[test]
+    fn stripe_of_inverts_ranges() {
+        let g = GridPartition::new(100, 64, 7).unwrap();
+        for i in 0..100 {
+            let b = g.row_stripe_of(i);
+            assert!(g.row_range(b).contains(&i), "row {i} stripe {b}");
+        }
+        for j in 0..64 {
+            let b = g.col_stripe_of(j);
+            assert!(g.col_range(b).contains(&j));
+        }
+    }
+
+    #[test]
+    fn cyclic_parts_tile_exactly() {
+        // union of the B cyclic parts = all of V, with no overlaps
+        let g = GridPartition::new(12, 12, 4).unwrap();
+        let mut covered = vec![vec![0u8; 12]; 12];
+        for p in 0..4 {
+            let part = Part::cyclic(4, p);
+            assert!(part.is_valid());
+            for b in 0..4 {
+                for i in g.row_range(b) {
+                    for j in g.col_range(part.perm[b]) {
+                        covered[i][j] += 1;
+                    }
+                }
+            }
+        }
+        assert!(covered.iter().flatten().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn part_sizes_and_scale() {
+        let g = GridPartition::new(12, 12, 4).unwrap();
+        let part = Part::cyclic(4, 1);
+        assert_eq!(g.part_size(&part), 4 * 9);
+        assert_eq!(g.scale_dense(&part), 144.0 / 36.0);
+    }
+
+    #[test]
+    fn random_part_valid() {
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..50 {
+            assert!(Part::random(6, &mut rng).is_valid());
+        }
+    }
+
+    #[test]
+    fn cyclic_scheduler_sweeps_all_parts() {
+        let mut rng = Rng::seed_from(6);
+        let mut s = PartScheduler::new(PartSchedule::Cyclic, 3);
+        let parts: Vec<Part> = (0..6).map(|_| s.next_part(&mut rng)).collect();
+        assert_eq!(parts[0], Part::cyclic(3, 0));
+        assert_eq!(parts[1], Part::cyclic(3, 1));
+        assert_eq!(parts[2], Part::cyclic(3, 2));
+        assert_eq!(parts[3], parts[0]);
+    }
+
+    #[test]
+    fn random_shift_scheduler_yields_cyclic_parts() {
+        let mut rng = Rng::seed_from(7);
+        let mut s = PartScheduler::new(PartSchedule::RandomShift, 5);
+        for _ in 0..20 {
+            let part = s.next_part(&mut rng);
+            // must be one of the 5 cyclic parts
+            let shift = part.perm[0];
+            assert_eq!(part, Part::cyclic(5, shift));
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. `manifest.json` lists every lowered executable with
+//! its kind, hyper-parameters baked at lowering time, and I/O schema.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Element dtype of an executable input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "u32" => Ok(Dtype::U32),
+            other => Err(Error::Runtime(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// One named input or output tensor.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(IoSpec {
+            name: j.field("name")?.as_str()?.to_string(),
+            dtype: Dtype::parse(j.field("dtype")?.as_str()?)?,
+            shape: j
+                .field("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Batched part update `[B,m,K]×[B,K,n]×[B,m,n] → (W', H')`.
+    PartUpdate,
+    /// Full-matrix Langevin step.
+    LdUpdate,
+    /// Full-matrix unnormalised log-likelihood.
+    Loglik,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "part_update" => Ok(ArtifactKind::PartUpdate),
+            "ld_update" => Ok(ArtifactKind::LdUpdate),
+            "loglik" => Ok(ArtifactKind::Loglik),
+            other => Err(Error::Runtime(format!("unknown artifact kind '{other}'"))),
+        }
+    }
+}
+
+/// One lowered executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub beta: f32,
+    pub phi: f32,
+    pub mirror: bool,
+    /// Part-update batch size (B); 1 for full-matrix kinds.
+    pub b: usize,
+    /// Block rows (m) or full rows (I).
+    pub m: usize,
+    /// Block cols (n) or full cols (J).
+    pub n: usize,
+    pub k: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactEntry {
+    fn from_json(dir: &Path, j: &Json) -> Result<Self> {
+        let kind = ArtifactKind::parse(j.field("kind")?.as_str()?)?;
+        let (b, m, n) = match kind {
+            ArtifactKind::PartUpdate => (
+                j.field("b")?.as_usize()?,
+                j.field("m")?.as_usize()?,
+                j.field("n")?.as_usize()?,
+            ),
+            _ => (1, j.field("i")?.as_usize()?, j.field("j")?.as_usize()?),
+        };
+        Ok(ArtifactEntry {
+            name: j.field("name")?.as_str()?.to_string(),
+            file: dir.join(j.field("file")?.as_str()?),
+            kind,
+            beta: j.field("beta")?.as_f64()? as f32,
+            phi: j.field("phi")?.as_f64()? as f32,
+            mirror: j.field("mirror")?.as_bool()?,
+            b,
+            m,
+            n,
+            k: j.field("k")?.as_usize()?,
+            inputs: j
+                .field("inputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .field("outputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let version = j.field("version")?.as_usize()?;
+        if version != 1 {
+            return Err(Error::Runtime(format!("unsupported manifest version {version}")));
+        }
+        let entries = j
+            .field("entries")?
+            .as_arr()?
+            .iter()
+            .map(|e| ArtifactEntry::from_json(dir, e))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named '{name}'")))
+    }
+
+    /// Locate a part-update executable for the given geometry/model.
+    pub fn find_part_update(
+        &self,
+        beta: f32,
+        b: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        mirror: bool,
+    ) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| {
+                e.kind == ArtifactKind::PartUpdate
+                    && e.beta == beta
+                    && e.b == b
+                    && e.m == m
+                    && e.n == n
+                    && e.k == k
+                    && e.mirror == mirror
+            })
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no part_update artifact for beta={beta} B={b} m={m} n={n} k={k} \
+                     mirror={mirror}; add it to aot.py's shape table and re-run \
+                     `make artifacts`"
+                ))
+            })
+    }
+
+    /// Locate a full-matrix executable (`ld_update` or `loglik`).
+    pub fn find_full(
+        &self,
+        kind: ArtifactKind,
+        beta: f32,
+        i: usize,
+        j: usize,
+        k: usize,
+    ) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.beta == beta && e.m == i && e.n == j && e.k == k)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no {kind:?} artifact for beta={beta} I={i} J={j} K={k}"
+                ))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = r#"{
+ "version": 1,
+ "entries": [
+  {"name": "part_update_b1p0_B2_m4_n4_k2", "file": "pu.hlo.txt",
+   "kind": "part_update", "beta": 1.0, "phi": 1.0, "mirror": true,
+   "b": 2, "m": 4, "n": 4, "k": 2,
+   "inputs": [{"name": "ws", "dtype": "f32", "shape": [2,4,2]}],
+   "outputs": [{"name": "ws_next", "dtype": "f32", "shape": [2,4,2]}]},
+  {"name": "loglik_b1p0_i8_j8_k2", "file": "ll.hlo.txt",
+   "kind": "loglik", "beta": 1.0, "phi": 1.0, "mirror": true,
+   "i": 8, "j": 8, "k": 2,
+   "inputs": [{"name": "w", "dtype": "f32", "shape": [8,2]}],
+   "outputs": [{"name": "ll", "dtype": "f32", "shape": []}]}
+ ]
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn load_and_find() {
+        let dir = std::env::temp_dir().join("psgld_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let pu = m.find_part_update(1.0, 2, 4, 4, 2, true).unwrap();
+        assert_eq!(pu.kind, ArtifactKind::PartUpdate);
+        assert_eq!(pu.inputs[0].elements(), 16);
+        assert!(m.find_part_update(1.0, 3, 4, 4, 2, true).is_err());
+        let ll = m.find_full(ArtifactKind::Loglik, 1.0, 8, 8, 2).unwrap();
+        assert_eq!(ll.name, "loglik_b1p0_i8_j8_k2");
+        assert!(m.by_name("nope").is_err());
+        assert!(m.by_name("loglik_b1p0_i8_j8_k2").is_ok());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent/psgld")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

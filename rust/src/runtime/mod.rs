@@ -1,0 +1,213 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the PJRT CPU client (via
+//! the `xla` crate) and executes them from the sampling hot path.
+//!
+//! Python never runs here — the artifacts are self-contained HLO
+//! programs with the Pallas kernel, the Langevin noise (threefry from a
+//! `u32[2]` seed input) and the mirroring step already lowered in.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, ArtifactKind, Dtype, IoSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::linalg::StackedBlocks;
+use crate::{Error, Result};
+
+/// Compiled-executable cache over the artifact manifest.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Build an `f32` tensor literal from a flat slice + dims.
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Scalar f32 literal.
+fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// `u32[2]` seed literal.
+fn literal_seed(seed: [u32; 2]) -> xla::Literal {
+    xla::Literal::vec1(&seed)
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaRuntime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.by_name(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().ok_or_else(|| {
+                Error::Runtime(format!("non-utf8 path {:?}", entry.file))
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.prepare(name)?;
+        Ok(self.cache.get(name).expect("prepared"))
+    }
+
+    /// Execute an artifact whose lowered signature returns a tuple;
+    /// returns the tuple members as literals.
+    fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// One batched part update (paper Eqs. 8-9 over all B blocks of a
+    /// part, one dispatch): consumes stacked blocks, returns updated
+    /// stacked blocks.
+    #[allow(clippy::too_many_arguments)]
+    pub fn part_update(
+        &mut self,
+        entry_name: &str,
+        ws: &StackedBlocks,
+        hs: &StackedBlocks,
+        vs: &StackedBlocks,
+        eps: f32,
+        scale: f32,
+        lam_w: f32,
+        lam_h: f32,
+        seed: [u32; 2],
+    ) -> Result<(StackedBlocks, StackedBlocks)> {
+        let [b, m, k] = ws.dims();
+        let [b2, k2, n] = hs.dims();
+        let [b3, m2, n2] = vs.dims();
+        if b != b2 || b != b3 || k != k2 || m != m2 || n != n2 {
+            return Err(Error::Shape(format!(
+                "part_update dims mismatch: W{:?} H{:?} V{:?}",
+                ws.dims(),
+                hs.dims(),
+                vs.dims()
+            )));
+        }
+        let inputs = vec![
+            literal_f32(ws.as_slice(), &[b, m, k])?,
+            literal_f32(hs.as_slice(), &[b, k, n])?,
+            literal_f32(vs.as_slice(), &[b, m, n])?,
+            literal_scalar(eps),
+            literal_scalar(scale),
+            literal_scalar(lam_w),
+            literal_scalar(lam_h),
+            literal_seed(seed),
+        ];
+        let outs = self.execute(entry_name, &inputs)?;
+        if outs.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "part_update returned {} outputs, expected 2",
+                outs.len()
+            )));
+        }
+        let mut ws_next = StackedBlocks::zeros(b, m, k);
+        ws_next.as_mut_slice().copy_from_slice(&outs[0].to_vec::<f32>()?);
+        let mut hs_next = StackedBlocks::zeros(b, k, n);
+        hs_next.as_mut_slice().copy_from_slice(&outs[1].to_vec::<f32>()?);
+        Ok((ws_next, hs_next))
+    }
+
+    /// One full-matrix Langevin step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ld_update(
+        &mut self,
+        entry_name: &str,
+        w: &[f32],
+        h: &[f32],
+        v: &[f32],
+        dims: (usize, usize, usize), // (I, J, K)
+        eps: f32,
+        lam_w: f32,
+        lam_h: f32,
+        seed: [u32; 2],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (i, j, k) = dims;
+        let inputs = vec![
+            literal_f32(w, &[i, k])?,
+            literal_f32(h, &[k, j])?,
+            literal_f32(v, &[i, j])?,
+            literal_scalar(eps),
+            literal_scalar(lam_w),
+            literal_scalar(lam_h),
+            literal_seed(seed),
+        ];
+        let outs = self.execute(entry_name, &inputs)?;
+        Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+
+    /// Full-matrix unnormalised log-likelihood.
+    pub fn loglik(
+        &mut self,
+        entry_name: &str,
+        w: &[f32],
+        h: &[f32],
+        v: &[f32],
+        dims: (usize, usize, usize),
+    ) -> Result<f64> {
+        let (i, j, k) = dims;
+        let inputs = vec![
+            literal_f32(w, &[i, k])?,
+            literal_f32(h, &[k, j])?,
+            literal_f32(v, &[i, j])?,
+        ];
+        let outs = self.execute(entry_name, &inputs)?;
+        let v = outs[0].to_vec::<f32>()?;
+        Ok(v[0] as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full round-trip tests against real artifacts live in
+    // rust/tests/runtime_roundtrip.rs (they need `make artifacts`).
+
+    #[test]
+    fn literal_builders() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+        let s = literal_seed([7, 9]);
+        assert_eq!(s.to_vec::<u32>().unwrap(), vec![7, 9]);
+        let sc = literal_scalar(2.5);
+        assert_eq!(sc.get_first_element::<f32>().unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,224 @@
+//! DSGLD (Ahn, Shahbaba & Welling 2014) — the generic distributed SGLD
+//! the paper builds on and criticises (§1): `C` workers each hold a data
+//! shard and a **full copy** of `(W, H)`; every worker runs SGLD against
+//! its shard, and all parameters are synchronised (averaged) every
+//! `sync_every` iterations.
+//!
+//! Two inefficiencies relative to PSGLD — both reproduced here, and both
+//! measured by the cluster simulator's communication model:
+//!   1. every sync ships *all* of W and H (PSGLD ships one `H_b` block
+//!      per iteration);
+//!   2. the latent factors are replicated per worker instead of being
+//!      partitioned, so memory scales with `C · (I + J) · K`.
+
+use crate::config::StepSchedule;
+use crate::kernels::sgld_apply;
+use crate::linalg::Mat;
+use crate::model::tweedie::{grad_error, MU_EPS};
+use crate::model::NmfModel;
+use crate::rng::Rng;
+use crate::samplers::{FactorState, Sampler};
+
+/// One DSGLD worker: a shard (column range) and a full chain replica.
+struct Worker {
+    col_range: std::ops::Range<usize>,
+    state: FactorState,
+    rng: Rng,
+    gw: Mat,
+    ght: Mat,
+}
+
+/// Distributed SGLD with periodic full-parameter synchronisation.
+pub struct Dsgld {
+    v: Mat,
+    model: NmfModel,
+    step: StepSchedule,
+    /// Sub-sample size per worker per iteration.
+    pub omega: usize,
+    /// Average all replicas every this many iterations.
+    pub sync_every: u64,
+    workers: Vec<Worker>,
+    /// Exposed chain (worker 0's replica).
+    exposed: FactorState,
+}
+
+impl Dsgld {
+    pub fn new(
+        v: &Mat,
+        model: &NmfModel,
+        n_workers: usize,
+        omega: usize,
+        sync_every: u64,
+        step: StepSchedule,
+        seed: u64,
+    ) -> Self {
+        assert!(n_workers >= 1 && n_workers <= v.cols());
+        let mut init_rng = Rng::derive(seed, &[0xd5_91d]);
+        let shared = FactorState::from_prior(model, v.rows(), v.cols(), &mut init_rng);
+        let cols_per = v.cols() / n_workers;
+        let workers = (0..n_workers)
+            .map(|c| {
+                let start = c * cols_per;
+                let end = if c + 1 == n_workers { v.cols() } else { start + cols_per };
+                Worker {
+                    col_range: start..end,
+                    state: shared.clone(),
+                    rng: Rng::derive(seed, &[0xd5_91d, c as u64 + 1]),
+                    gw: Mat::zeros(v.rows(), model.k),
+                    ght: Mat::zeros(v.cols(), model.k),
+                }
+            })
+            .collect();
+        Dsgld {
+            v: v.clone(),
+            model: model.clone(),
+            step,
+            omega: omega.max(1),
+            sync_every: sync_every.max(1),
+            workers,
+            exposed: shared,
+        }
+    }
+
+    /// Bytes shipped per synchronisation (all replicas exchange full
+    /// parameters) — the quantity the cluster simulator charges.
+    pub fn sync_bytes(&self) -> usize {
+        let (i, j, k) = self.exposed.shape();
+        self.workers.len() * (i + j) * k * std::mem::size_of::<f32>()
+    }
+
+    fn sync(&mut self) {
+        // parameter averaging across replicas
+        let c = self.workers.len() as f32;
+        let (i, j, k) = self.exposed.shape();
+        let mut w_avg = Mat::zeros(i, k);
+        let mut ht_avg = Mat::zeros(j, k);
+        for wk in &self.workers {
+            w_avg.axpy(1.0 / c, &wk.state.w).expect("shape");
+            ht_avg.axpy(1.0 / c, &wk.state.ht).expect("shape");
+        }
+        for wk in &mut self.workers {
+            wk.state.w = w_avg.clone();
+            wk.state.ht = ht_avg.clone();
+        }
+        self.exposed = FactorState { w: w_avg, ht: ht_avg };
+    }
+}
+
+impl Sampler for Dsgld {
+    fn step(&mut self, t: u64) {
+        let eps = self.step.eps(t) as f32;
+        let (i_rows, _, k) = self.exposed.shape();
+        let n_total = (self.v.rows() * self.v.cols()) as f32;
+        let model = &self.model;
+        let v = &self.v;
+        let omega = self.omega;
+
+        for wk in &mut self.workers {
+            wk.gw.as_mut_slice().fill(0.0);
+            wk.ght.as_mut_slice().fill(0.0);
+            let shard_cols = wk.col_range.len();
+            for _ in 0..omega {
+                let ri = wk.rng.next_below(i_rows as u64) as usize;
+                let rj = wk.col_range.start
+                    + wk.rng.next_below(shard_cols as u64) as usize;
+                let wrow = wk.state.w.row(ri);
+                let htrow = wk.state.ht.row(rj);
+                let mut mu = MU_EPS;
+                for kk in 0..k {
+                    mu += wrow[kk].abs() * htrow[kk].abs();
+                }
+                let e = grad_error(v.get(ri, rj), mu, model.beta, model.phi);
+                let gwrow = wk.gw.row_mut(ri);
+                for kk in 0..k {
+                    let s = if wrow[kk] == 0.0 { 0.0 } else { wrow[kk].signum() };
+                    gwrow[kk] += e * s * htrow[kk].abs();
+                }
+                let ghtrow = wk.ght.row_mut(rj);
+                for kk in 0..k {
+                    let s = if htrow[kk] == 0.0 { 0.0 } else { htrow[kk].signum() };
+                    ghtrow[kk] += e * s * wrow[kk].abs();
+                }
+            }
+            // scale: shard fraction of N over the subsample
+            let scale = n_total / omega as f32;
+            sgld_apply(
+                &mut wk.state.w, &wk.gw, eps, scale, model.lam_w, model.mirror,
+                &mut wk.rng,
+            );
+            sgld_apply(
+                &mut wk.state.ht, &wk.ght, eps, scale, model.lam_h, model.mirror,
+                &mut wk.rng,
+            );
+        }
+
+        if t % self.sync_every == 0 {
+            self.sync();
+        } else {
+            self.exposed = self.workers[0].state.clone();
+        }
+    }
+
+    fn state(&self) -> &FactorState {
+        &self.exposed
+    }
+
+    fn model(&self) -> &NmfModel {
+        &self.model
+    }
+
+    fn name(&self) -> &'static str {
+        "dsgld"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::data::synth;
+    use crate::samplers::run_sampler;
+
+    #[test]
+    fn dsgld_improves_loglik() {
+        let model = NmfModel::poisson(3);
+        let data = synth::poisson_nmf(24, 24, &model, 41);
+        let mut d = Dsgld::new(
+            &data.v, &model, 3, 64, 5,
+            StepSchedule::Polynomial { a: 5e-4, b: 0.51 }, 42,
+        );
+        let run = RunConfig::quick(250);
+        let res = run_sampler(&mut d, &run, |s| model.loglik_dense(&s.w, &s.h(), &data.v));
+        assert!(res.trace.last_value() > res.trace.values[0]);
+    }
+
+    #[test]
+    fn sync_brings_replicas_together() {
+        let model = NmfModel::poisson(2);
+        let data = synth::poisson_nmf(12, 12, &model, 43);
+        let mut d = Dsgld::new(
+            &data.v, &model, 4, 16, 3,
+            StepSchedule::Polynomial { a: 1e-3, b: 0.51 }, 44,
+        );
+        d.step(1);
+        d.step(2);
+        // before sync: replicas differ
+        assert_ne!(d.workers[0].state.w, d.workers[1].state.w);
+        d.step(3); // sync_every = 3 triggers here
+        for c in 1..4 {
+            assert_eq!(d.workers[0].state.w, d.workers[c].state.w);
+        }
+    }
+
+    #[test]
+    fn sync_bytes_scale_with_workers_and_size() {
+        let model = NmfModel::poisson(4);
+        let data = synth::poisson_nmf(16, 32, &model, 45);
+        let d2 = Dsgld::new(&data.v, &model, 2, 8, 2,
+                            StepSchedule::paper_sgld(), 46);
+        let d4 = Dsgld::new(&data.v, &model, 4, 8, 2,
+                            StepSchedule::paper_sgld(), 46);
+        assert_eq!(d2.sync_bytes(), 2 * (16 + 32) * 4 * 4);
+        assert_eq!(d4.sync_bytes(), 2 * d2.sync_bytes());
+    }
+}

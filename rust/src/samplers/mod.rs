@@ -1,0 +1,206 @@
+//! The samplers: PSGLD (the paper's contribution, shared-memory
+//! parallel) and every comparator the evaluation uses — LD, SGLD, the
+//! Poisson-NMF Gibbs sampler, DSGD (optimisation baseline) and DSGLD.
+//!
+//! All samplers share the [`FactorState`] layout (`W: I×K`, `Ht: J×K` —
+//! H stored transposed for contiguous column-stripe blocks) and are
+//! driven by [`run_sampler`], which owns timing, monitoring and
+//! posterior-mean collection so per-sampler code is just `step`.
+
+pub mod coupled;
+pub mod dsgd;
+pub mod dsgld;
+pub mod gibbs;
+pub mod ld;
+pub mod multichain;
+pub mod psgld;
+pub mod sgld;
+
+pub use coupled::CoupledPsgld;
+pub use dsgd::Dsgd;
+pub use dsgld::Dsgld;
+pub use gibbs::GibbsPoisson;
+pub use ld::Ld;
+pub use multichain::{run_chains, MultiChainResult};
+pub use psgld::Psgld;
+pub use sgld::Sgld;
+
+use std::time::Instant;
+
+use crate::config::RunConfig;
+use crate::linalg::Mat;
+use crate::metrics::Trace;
+use crate::model::NmfModel;
+use crate::rng::Rng;
+
+/// Factor state `(W, H)` with H stored transposed (`Ht[j][k] = h[k][j]`).
+#[derive(Clone, Debug)]
+pub struct FactorState {
+    /// Dictionary, `I × K`.
+    pub w: Mat,
+    /// Weights transposed, `J × K`.
+    pub ht: Mat,
+}
+
+impl FactorState {
+    /// Initialise from the model's exponential priors.
+    pub fn from_prior(model: &NmfModel, i: usize, j: usize, rng: &mut Rng) -> Self {
+        let (w, h) = model.sample_prior(i, j, rng);
+        FactorState { w, ht: h.transpose() }
+    }
+
+    /// The canonical `K × J` weight matrix (copies).
+    pub fn h(&self) -> Mat {
+        self.ht.transpose()
+    }
+
+    /// `(I, J, K)`.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.w.rows(), self.ht.rows(), self.w.cols())
+    }
+
+    /// Reconstruction `|W||H|`.
+    pub fn reconstruct(&self) -> Mat {
+        self.w.matmul_abs(&self.h()).expect("shape")
+    }
+}
+
+/// Running posterior mean of `(|W|, |Ht|)` over collected samples (the
+/// Monte Carlo averages plotted in Fig. 3).
+#[derive(Clone, Debug)]
+pub struct PosteriorMean {
+    w_sum: Mat,
+    ht_sum: Mat,
+    count: u64,
+}
+
+impl PosteriorMean {
+    pub fn new(i: usize, j: usize, k: usize) -> Self {
+        PosteriorMean { w_sum: Mat::zeros(i, k), ht_sum: Mat::zeros(j, k), count: 0 }
+    }
+
+    pub fn add(&mut self, state: &FactorState) {
+        for (acc, &x) in self.w_sum.as_mut_slice().iter_mut().zip(state.w.as_slice()) {
+            *acc += x.abs();
+        }
+        for (acc, &x) in self.ht_sum.as_mut_slice().iter_mut().zip(state.ht.as_slice()) {
+            *acc += x.abs();
+        }
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Posterior-mean dictionary `E[|W|]`.
+    pub fn w_mean(&self) -> Mat {
+        let mut m = self.w_sum.clone();
+        let c = (self.count.max(1)) as f32;
+        for x in m.as_mut_slice() {
+            *x /= c;
+        }
+        m
+    }
+
+    /// Posterior-mean weights `E[|H|]` (returned transposed, `J × K`).
+    pub fn ht_mean(&self) -> Mat {
+        let mut m = self.ht_sum.clone();
+        let c = (self.count.max(1)) as f32;
+        for x in m.as_mut_slice() {
+            *x /= c;
+        }
+        m
+    }
+}
+
+/// One MCMC method over a fixed dataset. `step` advances the chain one
+/// iteration; the run driver handles everything else.
+pub trait Sampler {
+    /// Advance the chain by one iteration (`t` is 1-based).
+    fn step(&mut self, t: u64);
+
+    /// Current factor state.
+    fn state(&self) -> &FactorState;
+
+    /// Model hyper-parameters.
+    fn model(&self) -> &NmfModel;
+
+    /// Human-readable name for traces/CSV.
+    fn name(&self) -> &'static str;
+}
+
+/// Outcome of [`run_sampler`].
+pub struct RunResult {
+    /// Monitor trace (value vs iteration vs wall seconds; monitor time
+    /// is excluded from the clock).
+    pub trace: Trace,
+    /// Posterior means over post-burn-in (thinned) samples.
+    pub posterior: PosteriorMean,
+    /// Pure sampling wall time (monitors excluded).
+    pub sampling_seconds: f64,
+}
+
+/// Drive a sampler for `run.t_total` iterations, recording
+/// `monitor(state)` every `run.monitor_every` iterations (monitor cost
+/// excluded from the timer) and accumulating posterior means after
+/// burn-in with thinning.
+pub fn run_sampler<S: Sampler + ?Sized>(
+    sampler: &mut S,
+    run: &RunConfig,
+    mut monitor: impl FnMut(&FactorState) -> f64,
+) -> RunResult {
+    run.validate().expect("valid run config");
+    let (i, j, k) = sampler.state().shape();
+    let mut posterior = PosteriorMean::new(i, j, k);
+    let mut trace = Trace::new(sampler.name());
+    let mut sampling_seconds = 0.0f64;
+
+    // initial monitor point (iteration 0)
+    trace.push(0, 0.0, monitor(sampler.state()));
+
+    for t in 1..=run.t_total {
+        let tick = Instant::now();
+        sampler.step(t);
+        sampling_seconds += tick.elapsed().as_secs_f64();
+
+        if t % run.monitor_every == 0 || t == run.t_total {
+            trace.push(t, sampling_seconds, monitor(sampler.state()));
+        }
+        if t > run.burn_in && (t - run.burn_in) % run.thin == 0 {
+            posterior.add(sampler.state());
+        }
+    }
+    RunResult { trace, posterior, sampling_seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_state_roundtrip() {
+        let model = NmfModel::poisson(3);
+        let mut rng = Rng::seed_from(1);
+        let s = FactorState::from_prior(&model, 5, 7, &mut rng);
+        assert_eq!(s.shape(), (5, 7, 3));
+        let h = s.h();
+        assert_eq!(h.shape(), (3, 7));
+        assert_eq!(h.get(2, 6), s.ht.get(6, 2));
+        assert_eq!(s.reconstruct().shape(), (5, 7));
+    }
+
+    #[test]
+    fn posterior_mean_accumulates() {
+        let model = NmfModel::poisson(2);
+        let mut rng = Rng::seed_from(2);
+        let s1 = FactorState::from_prior(&model, 3, 3, &mut rng);
+        let s2 = FactorState::from_prior(&model, 3, 3, &mut rng);
+        let mut pm = PosteriorMean::new(3, 3, 2);
+        pm.add(&s1);
+        pm.add(&s2);
+        assert_eq!(pm.count(), 2);
+        let expect = 0.5 * (s1.w.get(1, 1).abs() + s2.w.get(1, 1).abs());
+        assert!((pm.w_mean().get(1, 1) - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-crate substrates replacing unavailable third-party crates (the
+//! build environment is fully offline — see DESIGN.md §"offline
+//! substitutions"): JSON, a scoped thread pool, and a lightweight
+//! property-testing harness.
+
+pub mod json;
+pub mod parallel;
+pub mod prop;
+
+pub use json::Json;

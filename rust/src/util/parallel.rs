@@ -1,0 +1,116 @@
+//! Scoped-thread data parallelism (rayon is unavailable offline).
+//!
+//! `par_map_mut` is what the shared-memory PSGLD driver needs: apply a
+//! closure to B disjoint `&mut` work items (the blocks of a part) across
+//! a bounded number of OS threads. Items are distributed round-robin;
+//! with B ≤ threads each item gets its own thread, matching the paper's
+//! one-thread-per-block GPU/OpenMP structure.
+
+/// Number of worker threads to use by default (the machine's
+/// parallelism, capped so tests stay snappy).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every element of `items` in parallel using at most
+/// `threads` OS threads. Preserves ordering semantics trivially since
+/// each element is processed exactly once via `&mut`.
+pub fn par_for_each_mut<T: Send>(
+    items: &mut [T],
+    threads: usize,
+    f: impl Fn(usize, &mut T) + Sync,
+) {
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let f = &f;
+    // round-robin assignment of items to threads
+    std::thread::scope(|scope| {
+        let mut slots: Vec<Vec<(usize, &mut T)>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, item) in items.iter_mut().enumerate() {
+            slots[i % threads].push((i, item));
+        }
+        for slot in slots {
+            scope.spawn(move || {
+                for (i, item) in slot {
+                    f(i, item);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map producing a `Vec<R>` in input order.
+pub fn par_map<T: Send, R: Send>(
+    items: Vec<T>,
+    threads: usize,
+    f: impl Fn(usize, T) -> R + Sync,
+) -> Vec<R> {
+    let mut slots: Vec<(usize, Option<T>, Option<R>)> = items
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| (i, Some(t), None))
+        .collect();
+    par_for_each_mut(&mut slots, threads, |_, slot| {
+        let t = slot.1.take().expect("item present");
+        slot.2 = Some(f(slot.0, t));
+    });
+    slots.into_iter().map(|s| s.2.expect("result present")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_for_each_mut_touches_every_item_once() {
+        let mut items: Vec<usize> = vec![0; 37];
+        par_for_each_mut(&mut items, 4, |i, x| {
+            *x += i + 1;
+        });
+        for (i, &x) in items.iter().enumerate() {
+            assert_eq!(x, i + 1);
+        }
+    }
+
+    #[test]
+    fn par_for_each_mut_single_thread_path() {
+        let mut items = vec![1, 2, 3];
+        par_for_each_mut(&mut items, 1, |_, x| *x *= 10);
+        assert_eq!(items, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn par_for_each_runs_concurrently_when_asked() {
+        let counter = AtomicUsize::new(0);
+        let mut items = vec![(); 8];
+        par_for_each_mut(&mut items, 8, |_, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..23).collect();
+        let out = par_map(items, 5, |i, x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..23).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_zero_threads_are_safe() {
+        let mut empty: Vec<u8> = vec![];
+        par_for_each_mut(&mut empty, 0, |_, _| {});
+        let mut one = vec![5u8];
+        par_for_each_mut(&mut one, 0, |_, x| *x += 1);
+        assert_eq!(one[0], 6);
+    }
+}

@@ -1,0 +1,115 @@
+//! Lightweight property-based testing harness (proptest is unavailable
+//! offline). `forall` runs a property over `cases` randomly generated
+//! inputs from a deterministic seed and reports the first failing case
+//! with its case index and debug rendering, so failures are exactly
+//! reproducible. No shrinking — generators should keep inputs small.
+
+use crate::rng::Rng;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics on the first
+/// failure, printing the case index, seed and input.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::derive(seed, &[case as u64]);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so it
+/// can explain *why* it failed.
+pub fn forall_explain<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::derive(seed, &[case as u64]);
+        let input = gen(&mut rng);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {why}\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::Rng;
+
+    /// Uniform integer in `[lo, hi]`.
+    pub fn int_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+        rng.uniform(lo as f64, hi as f64) as f32
+    }
+
+    /// Random vector of f32s in `[lo, hi)`.
+    pub fn vec_f32(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| f32_in(rng, lo, hi)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("sum-commutes", 1, 50, |r| (r.next_f64(), r.next_f64()), |&(a, b)| {
+            count += 1;
+            a + b == b + a
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed at case 0")]
+    fn failing_property_panics_with_case() {
+        forall("always-fails", 2, 10, |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut first: Vec<u64> = Vec::new();
+        forall("collect", 3, 5, |r| r.next_u64(), |&x| {
+            first.push(x);
+            true
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall("collect", 3, 5, |r| r.next_u64(), |&x| {
+            second.push(x);
+            true
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn gen_helpers_in_range() {
+        let mut rng = crate::rng::Rng::seed_from(4);
+        for _ in 0..1000 {
+            let i = gen::int_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&i));
+            let f = gen::f32_in(&mut rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        assert_eq!(gen::vec_f32(&mut rng, 7, 0.0, 1.0).len(), 7);
+    }
+}

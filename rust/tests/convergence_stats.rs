@@ -1,0 +1,125 @@
+//! Statistical convergence tests — the paper's Theorem 1 says the PSGLD
+//! chain targets the Bayesian posterior. We cannot verify an asymptotic
+//! statement exactly, but we can check strong necessary conditions on a
+//! tiny conjugate-ish problem where Gibbs provides the ground truth:
+//! posterior means and spreads of summary statistics must agree between
+//! PSGLD and Gibbs within Monte Carlo error.
+
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::data::synth;
+use psgld::metrics::SummaryStats;
+use psgld::model::NmfModel;
+use psgld::samplers::{run_sampler, GibbsPoisson, Psgld, Sampler};
+
+/// Posterior mean of the reconstruction mu summed over entries — a
+/// scalar summary whose posterior is well-identified (unlike W, H which
+/// suffer permutation/scale non-identifiability).
+fn recon_mass_chain<S: Sampler>(s: &mut S, t_total: u64, burn: u64) -> Vec<f64> {
+    let mut vals = Vec::new();
+    for t in 1..=t_total {
+        s.step(t);
+        if t > burn {
+            let recon = s.state().reconstruct();
+            vals.push(recon.as_slice().iter().map(|&x| x as f64).sum::<f64>());
+        }
+    }
+    vals
+}
+
+#[test]
+fn psgld_posterior_matches_gibbs_on_small_problem() {
+    let model = NmfModel::poisson(3);
+    let data = synth::poisson_nmf(16, 16, &model, 555);
+    let data_mass: f64 = data.v.as_slice().iter().map(|&x| x as f64).sum();
+
+    let mut gibbs = GibbsPoisson::new(&data.v, &model, 1);
+    let g_chain = recon_mass_chain(&mut gibbs, 1_500, 500);
+    let g = SummaryStats::from_chain(&g_chain);
+
+    let run = RunConfig::quick(8_000)
+        .with_step(StepSchedule::Polynomial { a: 0.004, b: 0.51 });
+    let mut psgld_s = Psgld::new(&data.v, &model, 4, run, 2);
+    let p_chain = recon_mass_chain(&mut psgld_s, 8_000, 4_000);
+    let p = SummaryStats::from_chain(&p_chain);
+
+    // Poisson posterior mass concentrates near the observed mass
+    assert!(
+        (g.mean - data_mass).abs() < 0.05 * data_mass,
+        "gibbs mass {} vs data {}",
+        g.mean,
+        data_mass
+    );
+    // PSGLD must land on the same posterior mean within a few MC sds
+    let tol = 4.0 * (g.sd / (g.ess.max(4.0)).sqrt() + p.sd / (p.ess.max(4.0)).sqrt())
+        + 0.01 * data_mass;
+    assert!(
+        (g.mean - p.mean).abs() < tol,
+        "psgld {} vs gibbs {} (tol {tol})",
+        p.mean,
+        g.mean
+    );
+    // and its posterior spread must be the same order (within 3x)
+    assert!(
+        p.sd < 3.0 * g.sd + 1.0 && g.sd < 3.0 * p.sd + 1.0,
+        "sd mismatch: psgld {} gibbs {}",
+        p.sd,
+        g.sd
+    );
+}
+
+#[test]
+fn decreasing_step_reduces_discretisation_bias() {
+    // With a larger constant step the Langevin discretisation inflates
+    // the stationary spread; the (a/t)^b schedule should end tighter
+    // than a large constant step on the same problem.
+    let model = NmfModel::poisson(2);
+    let data = synth::poisson_nmf(12, 12, &model, 7);
+
+    let run_poly = RunConfig::quick(4_000)
+        .with_step(StepSchedule::Polynomial { a: 0.004, b: 0.51 });
+    let mut a = Psgld::new(&data.v, &model, 3, run_poly, 3);
+    let chain_a = recon_mass_chain(&mut a, 4_000, 2_000);
+    let sa = SummaryStats::from_chain(&chain_a);
+
+    let run_const = RunConfig::quick(4_000)
+        .with_step(StepSchedule::Constant { eps: 0.02 });
+    let mut b = Psgld::new(&data.v, &model, 3, run_const, 3);
+    let chain_b = recon_mass_chain(&mut b, 4_000, 2_000);
+    let sb = SummaryStats::from_chain(&chain_b);
+
+    assert!(
+        sa.sd < sb.sd,
+        "polynomial schedule sd {} should be below constant-step sd {}",
+        sa.sd,
+        sb.sd
+    );
+}
+
+#[test]
+fn loglik_trace_is_stationary_after_burnin() {
+    // post burn-in, the loglik trace should not trend: first and second
+    // half means agree within the chain's own spread
+    let model = NmfModel::poisson(4);
+    let data = synth::poisson_nmf(32, 32, &model, 9);
+    let run = RunConfig::quick(3_000)
+        .with_step(StepSchedule::Polynomial { a: 0.002, b: 0.51 })
+        .with_monitor_every(10);
+    let mut s = Psgld::new(&data.v, &model, 4, run.clone(), 4);
+    let res = run_sampler(&mut s, &run, |st| model.loglik_dense(&st.w, &st.h(), &data.v));
+    let vals: Vec<f64> = res
+        .trace
+        .iters
+        .iter()
+        .zip(&res.trace.values)
+        .filter(|(&it, _)| it > 1_500)
+        .map(|(_, &v)| v)
+        .collect();
+    let half = vals.len() / 2;
+    let m1 = vals[..half].iter().sum::<f64>() / half as f64;
+    let m2 = vals[half..].iter().sum::<f64>() / (vals.len() - half) as f64;
+    let sd = SummaryStats::from_chain(&vals).sd;
+    assert!(
+        (m1 - m2).abs() < 3.0 * sd + 0.002 * m1.abs(),
+        "trend detected: {m1} vs {m2} (sd {sd})"
+    );
+}

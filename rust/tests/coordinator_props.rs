@@ -1,0 +1,218 @@
+//! Property-based invariants of the coordination machinery (partition
+//! laws, scheduler coverage, stacked-block permutation algebra, sparse
+//! block decomposition) via the in-crate property harness.
+
+use psgld::data::sparse::{BlockedSparse, Csr};
+use psgld::linalg::{Mat, StackedBlocks};
+use psgld::partition::{GridPartition, Part, PartSchedule, PartScheduler};
+use psgld::rng::Rng;
+use psgld::util::prop::{forall_explain, gen};
+
+#[test]
+fn prop_parts_tile_v_exactly() {
+    // For any (rows, cols, B), the B cyclic parts partition [I]x[J].
+    forall_explain(
+        "cyclic-parts-tile",
+        101,
+        40,
+        |rng| {
+            let b = gen::int_in(rng, 1, 9);
+            let rows = gen::int_in(rng, b, 40);
+            let cols = gen::int_in(rng, b, 40);
+            (rows, cols, b)
+        },
+        |&(rows, cols, b)| {
+            let g = GridPartition::new(rows, cols, b).map_err(|e| e.to_string())?;
+            let mut covered = vec![0u8; rows * cols];
+            for p in 0..b {
+                let part = Part::cyclic(b, p);
+                for bi in 0..b {
+                    for i in g.row_range(bi) {
+                        for j in g.col_range(part.perm[bi]) {
+                            covered[i * cols + j] += 1;
+                        }
+                    }
+                }
+            }
+            if covered.iter().all(|&c| c == 1) {
+                Ok(())
+            } else {
+                Err("some entry not covered exactly once".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_part_sizes_sum_to_n() {
+    forall_explain(
+        "part-sizes-sum",
+        102,
+        40,
+        |rng| {
+            let b = gen::int_in(rng, 1, 8);
+            (gen::int_in(rng, b, 50), gen::int_in(rng, b, 50), b)
+        },
+        |&(rows, cols, b)| {
+            let g = GridPartition::new(rows, cols, b).map_err(|e| e.to_string())?;
+            let total: usize = (0..b).map(|p| g.part_size(&Part::cyclic(b, p))).sum();
+            (total == rows * cols)
+                .then_some(())
+                .ok_or_else(|| format!("{total} != {}", rows * cols))
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_visits_every_entry_once_per_sweep() {
+    // a B-iteration cyclic sweep touches every block exactly once
+    forall_explain(
+        "cyclic-sweep-coverage",
+        103,
+        30,
+        |rng| gen::int_in(rng, 1, 12),
+        |&b| {
+            let mut sched = PartScheduler::new(PartSchedule::Cyclic, b);
+            let mut rng = Rng::seed_from(0);
+            let mut seen = vec![false; b * b];
+            for _ in 0..b {
+                let part = sched.next_part(&mut rng);
+                for (bi, &bj) in part.perm.iter().enumerate() {
+                    if seen[bi * b + bj] {
+                        return Err(format!("block ({bi},{bj}) visited twice"));
+                    }
+                    seen[bi * b + bj] = true;
+                }
+            }
+            seen.iter()
+                .all(|&s| s)
+                .then_some(())
+                .ok_or_else(|| "unvisited block".into())
+        },
+    );
+}
+
+#[test]
+fn prop_random_parts_always_valid() {
+    forall_explain(
+        "random-parts-valid",
+        104,
+        60,
+        |rng| {
+            let b = gen::int_in(rng, 1, 16);
+            let mut sched = PartScheduler::new(PartSchedule::RandomPerm, b);
+            sched.next_part(rng)
+        },
+        |part| part.is_valid().then_some(()).ok_or_else(|| "invalid perm".into()),
+    );
+}
+
+#[test]
+fn prop_gather_scatter_is_identity() {
+    // scatter(perm, gather(perm, x)) == x for any permutation
+    forall_explain(
+        "gather-scatter-identity",
+        105,
+        40,
+        |rng| {
+            let b = gen::int_in(rng, 1, 8);
+            let r = gen::int_in(rng, 1, 6);
+            let c = gen::int_in(rng, 1, 6);
+            let blocks: Vec<Mat> =
+                (0..b).map(|_| Mat::uniform(r, c, -1.0, 1.0, rng)).collect();
+            let stacked = StackedBlocks::from_blocks(&blocks).unwrap();
+            let part = Part::random(b, rng);
+            (stacked, part)
+        },
+        |(stacked, part)| {
+            let [b, r, c] = stacked.dims();
+            let mut gathered = StackedBlocks::zeros(b, r, c);
+            stacked.gather_perm_into(&part.perm, &mut gathered);
+            let mut back = StackedBlocks::zeros(b, r, c);
+            back.scatter_perm_from(&part.perm, &gathered);
+            (&back == stacked)
+                .then_some(())
+                .ok_or_else(|| "roundtrip mismatch".into())
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_sparse_preserves_entries_and_scale() {
+    forall_explain(
+        "blocked-sparse-conservation",
+        106,
+        30,
+        |rng| {
+            let rows = gen::int_in(rng, 4, 30);
+            let cols = gen::int_in(rng, 4, 30);
+            let b = gen::int_in(rng, 1, rows.min(cols).min(5));
+            let nnz = gen::int_in(rng, 1, rows * cols / 2);
+            let mut triplets = Vec::new();
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..nnz {
+                let r = gen::int_in(rng, 0, rows - 1) as u32;
+                let c = gen::int_in(rng, 0, cols - 1) as u32;
+                if seen.insert((r, c)) {
+                    triplets.push((r, c, gen::f32_in(rng, 0.5, 5.0)));
+                }
+            }
+            (rows, cols, b, triplets)
+        },
+        |(rows, cols, b, triplets)| {
+            let mut t = triplets.clone();
+            let csr = Csr::from_triplets(*rows, *cols, &mut t).map_err(|e| e.to_string())?;
+            let bs = BlockedSparse::from_csr(&csr, *b).map_err(|e| e.to_string())?;
+            // entries conserved across blocks
+            let total: usize = (0..*b)
+                .flat_map(|bi| (0..*b).map(move |bj| (bi, bj)))
+                .map(|(bi, bj)| bs.block(bi, bj).nnz())
+                .sum();
+            if total != csr.nnz() {
+                return Err(format!("{total} != {}", csr.nnz()));
+            }
+            // part nnz sums to N over a sweep; scale is N/|part|
+            let part_total: usize =
+                (0..*b).map(|p| bs.part_nnz(&Part::cyclic(*b, p))).sum();
+            if part_total != csr.nnz() {
+                return Err(format!("parts {part_total} != {}", csr.nnz()));
+            }
+            for p in 0..*b {
+                let part = Part::cyclic(*b, p);
+                let pn = bs.part_nnz(&part);
+                if pn > 0 {
+                    let expect = csr.nnz() as f32 / pn as f32;
+                    if (bs.scale(&part) - expect).abs() > 1e-5 {
+                        return Err("scale mismatch".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stacked_roundtrip_row_and_col_stripes() {
+    forall_explain(
+        "stacked-stripe-roundtrip",
+        107,
+        30,
+        |rng| {
+            let b = gen::int_in(rng, 1, 6);
+            let m = gen::int_in(rng, 1, 5);
+            let k = gen::int_in(rng, 1, 5);
+            let full = Mat::uniform(b * m, k, -2.0, 2.0, rng);
+            (b, m, k, full)
+        },
+        |(b, m, k, full)| {
+            let blocks: Vec<Mat> = (0..*b)
+                .map(|bi| full.slice_block(bi * m, (bi + 1) * m, 0, *k))
+                .collect();
+            let stacked = StackedBlocks::from_blocks(&blocks).unwrap();
+            (&stacked.to_row_stripes() == full)
+                .then_some(())
+                .ok_or_else(|| "row-stripe roundtrip failed".into())
+        },
+    );
+}

@@ -1,0 +1,156 @@
+//! Failure-injection tests: wrong directories, mismatched shapes,
+//! invalid configs, corrupted manifests — every user-facing error path
+//! should fail loudly with an actionable message, never silently.
+
+use std::path::{Path, PathBuf};
+
+use psgld::config::{ExperimentConfig, RunConfig};
+use psgld::coordinator::HloPsgld;
+use psgld::data::synth;
+use psgld::linalg::{Mat, StackedBlocks};
+use psgld::model::NmfModel;
+use psgld::partition::GridPartition;
+use psgld::runtime::{Manifest, XlaRuntime};
+use psgld::util::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("psgld_failure_tests").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn missing_artifacts_dir_mentions_make() {
+    let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+    assert!(format!("{err}").contains("make artifacts"));
+}
+
+#[test]
+fn corrupted_manifest_is_rejected() {
+    let dir = tmp("corrupt");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+
+    // valid json, wrong version
+    std::fs::write(dir.join("manifest.json"), r#"{"version": 99, "entries": []}"#).unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err}").contains("version"));
+
+    // missing required fields
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "entries": [{"name": "x"}]}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn runtime_part_update_rejects_shape_mismatch() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let entry = rt
+        .manifest()
+        .find_part_update(1.0, 4, 32, 32, 16, true)
+        .unwrap()
+        .name
+        .clone();
+    let ws = StackedBlocks::zeros(4, 32, 16);
+    let hs = StackedBlocks::zeros(3, 16, 32); // wrong B
+    let vs = StackedBlocks::zeros(4, 32, 32);
+    let err = rt
+        .part_update(&entry, &ws, &hs, &vs, 0.01, 1.0, 1.0, 1.0, [0, 0])
+        .unwrap_err();
+    assert!(format!("{err}").contains("mismatch"));
+}
+
+#[test]
+fn hlo_psgld_rejects_nonuniform_grid_and_missing_artifact() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let model = NmfModel::poisson(16);
+    let data = synth::poisson_nmf(100, 100, &model, 1); // 100/4=25 != artifact m=32
+    let err = match HloPsgld::new(&dir, &data.v, &model, 4, RunConfig::quick(10), 1) {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => e,
+    };
+    let msg = format!("{err}");
+    assert!(msg.contains("artifact") || msg.contains("uniform"), "{msg}");
+
+    // non-divisible grid
+    let data = synth::poisson_nmf(127, 127, &model, 1);
+    let err = match HloPsgld::new(&dir, &data.v, &model, 4, RunConfig::quick(10), 1) {
+        Ok(_) => panic!("expected uniform-grid error"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("uniform"), "{err}");
+}
+
+#[test]
+fn grid_partition_rejects_bad_b() {
+    assert!(GridPartition::new(10, 10, 0).is_err());
+    assert!(GridPartition::new(10, 10, 11).is_err());
+    assert!(GridPartition::new(4, 20, 5).is_err()); // B > rows
+}
+
+#[test]
+fn matmul_shape_errors_are_reported() {
+    let a = Mat::zeros(3, 4);
+    let b = Mat::zeros(3, 4);
+    let err = a.matmul(&b).unwrap_err();
+    assert!(format!("{err}").contains("3x4"));
+    assert!(a.matmul_abs(&b).is_err());
+}
+
+#[test]
+fn experiment_config_bad_file_errors() {
+    let dir = tmp("cfg");
+    let path = dir.join("bad.json");
+    std::fs::write(&path, r#"{"name": "x"}"#).unwrap(); // missing fields
+    let err = ExperimentConfig::load(&path).unwrap_err();
+    assert!(format!("{err}").contains("missing field"));
+    assert!(ExperimentConfig::load(&dir.join("nope.json")).is_err());
+}
+
+#[test]
+fn json_depth_and_garbage_robustness() {
+    // deeply nested but valid
+    let mut s = String::new();
+    for _ in 0..200 {
+        s.push('[');
+    }
+    s.push('1');
+    for _ in 0..200 {
+        s.push(']');
+    }
+    assert!(Json::parse(&s).is_ok());
+    // NaN-ish / bad numbers
+    assert!(Json::parse("nan").is_err());
+    assert!(Json::parse("+1").is_err());
+    assert!(Json::parse("01abc").is_err());
+}
+
+#[test]
+fn run_config_validation_errors_are_actionable() {
+    let mut rc = RunConfig::quick(10);
+    rc.burn_in = 10;
+    let err = rc.validate().unwrap_err();
+    assert!(format!("{err}").contains("burn_in"));
+}
+
+#[test]
+fn stacked_blocks_from_empty_or_ragged() {
+    assert!(StackedBlocks::from_blocks(&[]).is_err());
+    let blocks = vec![Mat::zeros(2, 2), Mat::zeros(3, 2)];
+    assert!(StackedBlocks::from_blocks(&blocks).is_err());
+}

@@ -1,0 +1,219 @@
+//! Integration tests over the REAL artifacts (`make artifacts` first):
+//! the lowered HLO executables must agree numerically with the native
+//! Rust kernels — this is the contract that lets the coordinator treat
+//! the two backends interchangeably.
+
+use std::path::{Path, PathBuf};
+
+use psgld::kernels::{dense_block_grads, sign0};
+use psgld::linalg::{Mat, StackedBlocks};
+use psgld::model::NmfModel;
+use psgld::rng::Rng;
+use psgld::runtime::{ArtifactKind, XlaRuntime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+fn stacked_uniform(rng: &mut Rng, b: usize, r: usize, c: usize, lo: f32, hi: f32) -> StackedBlocks {
+    let blocks: Vec<Mat> = (0..b).map(|_| Mat::uniform(r, c, lo, hi, rng)).collect();
+    StackedBlocks::from_blocks(&blocks).unwrap()
+}
+
+#[test]
+fn loglik_hlo_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let entry = rt
+        .manifest()
+        .find_full(ArtifactKind::Loglik, 1.0, 128, 128, 16)
+        .unwrap()
+        .name
+        .clone();
+    let mut rng = Rng::seed_from(1);
+    let w = Mat::uniform(128, 16, 0.1, 1.0, &mut rng);
+    let h = Mat::uniform(16, 128, 0.1, 1.0, &mut rng);
+    let v = Mat::from_fn(128, 128, |i, j| ((i * 31 + j * 7) % 6) as f32);
+
+    let hlo = rt
+        .loglik(&entry, w.as_slice(), h.as_slice(), v.as_slice(), (128, 128, 16))
+        .unwrap();
+    let model = NmfModel::poisson(16);
+    let native = model.loglik_dense(&w, &h, &v);
+    let rel = (hlo - native).abs() / native.abs().max(1.0);
+    assert!(rel < 1e-4, "hlo {hlo} vs native {native} (rel {rel})");
+}
+
+#[test]
+fn part_update_drift_matches_native_gradients() {
+    // Same seed => identical threefry noise; subtracting a (scale=0,
+    // lam=0) call isolates the deterministic drift, which must equal
+    // eps * (scale * G - lam * sign) from the native kernel.
+    // Uses the no-mirror ablation artifact (beta=2, B=4, 32x32, K=16)
+    // so the subtraction is exact.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let entry = rt
+        .manifest()
+        .find_part_update(2.0, 4, 32, 32, 16, false)
+        .unwrap()
+        .name
+        .clone();
+
+    let mut rng = Rng::seed_from(2);
+    let ws = stacked_uniform(&mut rng, 4, 32, 16, 0.1, 1.0);
+    let hs = stacked_uniform(&mut rng, 4, 16, 32, 0.1, 1.0);
+    let vs = stacked_uniform(&mut rng, 4, 32, 32, 0.0, 5.0);
+
+    let (eps, scale, lam) = (0.01f32, 3.0f32, 0.7f32);
+    let seed = [11u32, 22u32];
+    let (w_full, h_full) = rt
+        .part_update(&entry, &ws, &hs, &vs, eps, scale, lam, lam, seed)
+        .unwrap();
+    let (w_noise, h_noise) = rt
+        .part_update(&entry, &ws, &hs, &vs, eps, 0.0, 0.0, 0.0, seed)
+        .unwrap();
+
+    for b in 0..4 {
+        let w_b = Mat::from_vec(32, 16, ws.block(b).to_vec()).unwrap();
+        let h_b = Mat::from_vec(16, 32, hs.block(b).to_vec()).unwrap();
+        let v_b = Mat::from_vec(32, 32, vs.block(b).to_vec()).unwrap();
+        let g = dense_block_grads(&w_b, &h_b.transpose(), &v_b, 2.0, 1.0);
+
+        // W drift
+        for idx in 0..32 * 16 {
+            let drift = w_full.block(b)[idx] - w_noise.block(b)[idx];
+            let expect = eps
+                * (scale * g.gw.as_slice()[idx] - lam * sign0(w_b.as_slice()[idx]));
+            assert!(
+                (drift - expect).abs() < 2e-3 * expect.abs().max(1.0),
+                "block {b} w[{idx}]: {drift} vs {expect}"
+            );
+        }
+        // H drift (HLO returns K x n; native ght is n x K)
+        let ght = g.ght.transpose(); // K x n
+        for idx in 0..16 * 32 {
+            let drift = h_full.block(b)[idx] - h_noise.block(b)[idx];
+            let expect = eps
+                * (scale * ght.as_slice()[idx] - lam * sign0(h_b.as_slice()[idx]));
+            assert!(
+                (drift - expect).abs() < 2e-3 * expect.abs().max(1.0),
+                "block {b} h[{idx}]: {drift} vs {expect}"
+            );
+        }
+    }
+}
+
+#[test]
+fn part_update_noise_is_2eps_gaussian() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let entry = rt
+        .manifest()
+        .find_part_update(2.0, 4, 32, 32, 16, false)
+        .unwrap()
+        .name
+        .clone();
+    let mut rng = Rng::seed_from(3);
+    let ws = stacked_uniform(&mut rng, 4, 32, 16, 0.4, 0.6);
+    let hs = stacked_uniform(&mut rng, 4, 16, 32, 0.4, 0.6);
+    let vs = stacked_uniform(&mut rng, 4, 32, 32, 0.0, 3.0);
+    let eps = 0.04f32;
+
+    let mut all = Vec::new();
+    for s in 0..40u32 {
+        let (w2, _) = rt
+            .part_update(&entry, &ws, &hs, &vs, eps, 0.0, 0.0, 0.0, [s, 77])
+            .unwrap();
+        for b in 0..4 {
+            for idx in 0..32 * 16 {
+                all.push((w2.block(b)[idx] - ws.block(b)[idx]) as f64);
+            }
+        }
+    }
+    let n = all.len() as f64;
+    let mean = all.iter().sum::<f64>() / n;
+    let var = all.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    assert!(mean.abs() < 0.003, "noise mean {mean}");
+    assert!(
+        (var - 2.0 * eps as f64).abs() < 0.004,
+        "noise var {var} vs {}",
+        2.0 * eps
+    );
+    // different seeds give different noise
+    let (a, _) = rt
+        .part_update(&entry, &ws, &hs, &vs, eps, 0.0, 0.0, 0.0, [1, 1])
+        .unwrap();
+    let (b2, _) = rt
+        .part_update(&entry, &ws, &hs, &vs, eps, 0.0, 0.0, 0.0, [1, 2])
+        .unwrap();
+    assert_ne!(a.block(0)[..8], b2.block(0)[..8]);
+}
+
+#[test]
+fn mirrored_part_update_keeps_state_nonnegative() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let entry = rt
+        .manifest()
+        .find_part_update(1.0, 4, 32, 32, 16, true)
+        .unwrap()
+        .name
+        .clone();
+    let mut rng = Rng::seed_from(4);
+    let ws = stacked_uniform(&mut rng, 4, 32, 16, 0.0, 0.3);
+    let hs = stacked_uniform(&mut rng, 4, 16, 32, 0.0, 0.3);
+    let vs = stacked_uniform(&mut rng, 4, 32, 32, 0.0, 3.0);
+    // huge eps so noise definitely crosses zero pre-mirroring
+    let (w2, h2) = rt
+        .part_update(&entry, &ws, &hs, &vs, 0.5, 1.0, 1.0, 1.0, [5, 6])
+        .unwrap();
+    assert!(w2.as_slice().iter().all(|&x| x >= 0.0));
+    assert!(h2.as_slice().iter().all(|&x| x >= 0.0));
+}
+
+#[test]
+fn ld_update_roundtrip_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let entry = rt
+        .manifest()
+        .find_full(ArtifactKind::LdUpdate, 1.0, 128, 128, 16)
+        .unwrap()
+        .name
+        .clone();
+    let mut rng = Rng::seed_from(5);
+    let w = Mat::uniform(128, 16, 0.1, 1.0, &mut rng);
+    let h = Mat::uniform(16, 128, 0.1, 1.0, &mut rng);
+    let v = Mat::from_fn(128, 128, |i, j| ((i + j) % 4) as f32);
+    let (w2, h2) = rt
+        .ld_update(
+            &entry,
+            w.as_slice(),
+            h.as_slice(),
+            v.as_slice(),
+            (128, 128, 16),
+            1e-3,
+            1.0,
+            1.0,
+            [9, 9],
+        )
+        .unwrap();
+    assert_eq!(w2.len(), 128 * 16);
+    assert_eq!(h2.len(), 16 * 128);
+    assert!(w2.iter().all(|x| x.is_finite() && *x >= 0.0));
+    assert!(h2.iter().all(|x| x.is_finite() && *x >= 0.0));
+    // the update actually moved the state
+    let moved = w2
+        .iter()
+        .zip(w.as_slice())
+        .filter(|(a, b)| (*a - *b).abs() > 1e-6)
+        .count();
+    assert!(moved > 100, "only {moved} entries moved");
+}
