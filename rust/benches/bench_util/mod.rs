@@ -1,6 +1,12 @@
 //! Tiny shared bench harness (criterion is unavailable offline):
-//! warmup + repeated timing with mean / min / throughput reporting.
+//! warmup + repeated timing with mean / min / throughput reporting,
+//! plus a machine-readable JSON sink (`BENCH_*.json` at the repo root).
 
+// each bench compiles its own copy of this module and uses a subset
+#![allow(dead_code)]
+
+use std::io::Write;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Time `f` over `reps` runs after `warmup` runs; returns seconds/run
@@ -46,4 +52,49 @@ pub fn header(title: &str) {
     println!("\n=== {title} ===");
     println!("{:<44} {:>12}   {:>14}", "benchmark", "time", "throughput");
     println!("{}", "-".repeat(76));
+}
+
+/// Collects benchmark rows and writes them as a JSON array (one object
+/// per row: name, ns_per_iter, ops_per_s, unit, threads). Consumed by
+/// EXPERIMENTS.md §Perf and any external tooling.
+pub struct JsonSink {
+    path: PathBuf,
+    rows: Vec<String>,
+}
+
+impl JsonSink {
+    /// Sink writing `file` at the repository root (one level above the
+    /// crate manifest).
+    pub fn at_repo_root(file: &str) -> Self {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(file);
+        JsonSink { path, rows: Vec::new() }
+    }
+
+    /// Record one row. `ops` is `(work_items, unit)` as passed to
+    /// [`report`]; `threads` is the worker count the row ran with
+    /// (1 for single-threaded kernels).
+    pub fn push(&mut self, name: &str, seconds: f64, ops: Option<(f64, &str)>, threads: usize) {
+        let (ops_per_s, unit) = match ops {
+            Some((n, unit)) => (n / seconds, unit),
+            None => (1.0 / seconds, "iters"),
+        };
+        self.rows.push(format!(
+            "{{\"name\":\"{}\",\"ns_per_iter\":{:.1},\"ops_per_s\":{:.2},\"unit\":\"{}\",\"threads\":{}}}",
+            name.replace('"', "'"),
+            seconds * 1e9,
+            ops_per_s,
+            unit,
+            threads
+        ));
+    }
+
+    /// Write the collected rows; failures are reported, not fatal
+    /// (benches should still print their table on a read-only checkout).
+    pub fn write(&self) {
+        let body = format!("[\n  {}\n]\n", self.rows.join(",\n  "));
+        match std::fs::File::create(&self.path).and_then(|mut f| f.write_all(body.as_bytes())) {
+            Ok(()) => println!("\nwrote {}", self.path.display()),
+            Err(e) => eprintln!("\ncould not write {}: {e}", self.path.display()),
+        }
+    }
 }

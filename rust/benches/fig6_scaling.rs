@@ -1,19 +1,27 @@
 //! Bench for Fig. 6: the cluster-simulator sweeps themselves (strong +
 //! weak scaling), printing the paper's series, plus the DSGLD
-//! communication comparison. Also times the simulator so its own cost
-//! is on record.
+//! communication comparison and the shared-memory worker-pool
+//! before/after (persistent pool vs the spawn-per-step regime it
+//! replaced). Also times the simulator so its own cost is on record.
 //!
 //! Run: `cargo bench --bench fig6_scaling`
 
 mod bench_util;
-use bench_util::{header, report, time_it};
+use bench_util::{header, report, time_it, JsonSink};
 
 use psgld::cluster::{
     dsgld_distributed_timing, psgld_distributed_timing, ComputeModel, NetworkModel,
     TimingWorkload,
 };
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::data::synth;
+use psgld::model::NmfModel;
+use psgld::samplers::{ExecMode, Psgld, Sampler};
+use psgld::util::parallel::default_threads;
 
 fn main() {
+    let mut json = JsonSink::at_repo_root("BENCH_fig6.json");
+
     header("Fig 6: simulated-cluster scaling sweeps");
     let net = NetworkModel::paper_cluster();
     let compute = ComputeModel::paper_node();
@@ -26,6 +34,12 @@ fn main() {
         println!(
             "  {b:>5}   {:>8.3}s  {:>8.3}s  {:>8.3}s",
             rep.virtual_seconds, rep.compute_seconds, rep.comm_seconds
+        );
+        json.push(
+            &format!("fig6a_strong/B={b}"),
+            rep.virtual_seconds / 100.0,
+            Some((1.0, "iters")),
+            b,
         );
     }
 
@@ -40,6 +54,12 @@ fn main() {
             w.nnz as f64 / 1e6,
             rep.virtual_seconds
         );
+        json.push(
+            &format!("fig6b_weak/step={s}"),
+            rep.virtual_seconds / 10.0,
+            Some((1.0, "iters")),
+            15usize << s,
+        );
     }
 
     println!("\nDSGLD communication comparison (15 nodes, 100 iters):");
@@ -52,9 +72,44 @@ fn main() {
         d.comm_seconds / p.comm_seconds
     );
 
+    // --- shared-memory step throughput: persistent pool vs spawn-per-step
+    // (the ISSUE acceptance point: >= 1.5x at B = 8, blocks <= 128x128)
+    header("shared-memory PSGLD step throughput: pool vs spawn (B=8, 128x128, K=16)");
+    let threads = default_threads().min(8);
+    let model = NmfModel::poisson(16);
+    let data = synth::poisson_nmf(128, 128, &model, 7);
+    let run = RunConfig::quick(1_000_000)
+        .with_step(StepSchedule::Polynomial { a: 0.002, b: 0.51 });
+    let mut results = Vec::new();
+    for (label, mode) in [("pool", ExecMode::Pool), ("spawn", ExecMode::Spawn)] {
+        let mut s = Psgld::new(&data.v, &model, 8, run.clone(), 11)
+            .with_threads(threads)
+            .with_exec_mode(mode);
+        let mut t = 0u64;
+        let secs = time_it(20, 200, || {
+            t += 1;
+            s.step(t);
+        });
+        report(
+            &format!("psgld_step/{label} ({threads} threads)"),
+            secs,
+            Some((1.0, "steps")),
+        );
+        json.push(&format!("psgld_step/{label}"), secs, Some((1.0, "steps")), threads);
+        results.push((label, secs));
+    }
+    let (pool_s, spawn_s) = (results[0].1, results[1].1);
+    let ratio = spawn_s / pool_s;
+    println!("persistent pool speedup over spawn-per-step: {ratio:.2}x");
+    // encoded so ops_per_s == the speedup ratio
+    json.push("psgld_step/pool_vs_spawn_ratio", 1.0 / ratio, Some((1.0, "x")), threads);
+
     // cost of the simulator itself
     let s = time_it(3, 20, || {
         let _ = psgld_distributed_timing(&wl, 120, 100, &net, &compute);
     });
     report("\nsimulator sweep cost (one 100-iter point)", s, None);
+    json.push("simulator_sweep_cost", s, None, 1);
+
+    json.write();
 }

@@ -5,16 +5,18 @@
 //! Run: `cargo bench --bench kernels`
 
 mod bench_util;
-use bench_util::{header, report, time_it};
+use bench_util::{header, report, time_it, JsonSink};
 
 use psgld::data::movielens;
 use psgld::data::sparse::BlockedSparse;
-use psgld::kernels::{grads_dense_core, grads_sparse_core, sgld_apply_core};
+use psgld::kernels::{grads_dense_core, grads_dense_tiled, grads_sparse_core, sgld_apply_core};
 use psgld::linalg::{Mat, StackedBlocks};
 use psgld::rng::{Dist, Rng};
+use psgld::util::parallel::ScratchArena;
 
 fn main() {
     let mut rng = Rng::seed_from(1);
+    let mut json = JsonSink::at_repo_root("BENCH_kernels.json");
 
     header("dense block gradients (64x64 block)");
     for &k in &[8usize, 16, 32, 50, 64] {
@@ -37,6 +39,54 @@ fn main() {
             s,
             Some(((m * m) as f64, "entries")),
         );
+        json.push(&format!("dense_grads/K={k}"), s, Some(((m * m) as f64, "entries")), 1);
+    }
+
+    header("tiled dense gradients: arena-reuse + nonneg fast path (128x128, K=32)");
+    {
+        let (m, n, k) = (128usize, 128usize, 32usize);
+        let w = Mat::uniform(m, k, 0.1, 1.0, &mut rng);
+        let ht = Mat::uniform(n, k, 0.1, 1.0, &mut rng);
+        let v = Mat::uniform(m, n, 0.0, 8.0, &mut rng);
+        let mut gw = vec![0f32; m * k];
+        let mut ght = vec![0f32; n * k];
+        // per-call allocation baseline (what the spawn-per-step regime did)
+        let s_alloc = time_it(5, 30, || {
+            gw.fill(0.0);
+            ght.fill(0.0);
+            grads_dense_core(
+                w.as_slice(), m, ht.as_slice(), n, k, v.as_slice(), 1.0, 1.0,
+                &mut gw, &mut ght,
+            );
+        });
+        report("dense_grads/alloc-per-call", s_alloc, Some(((m * n) as f64, "entries")));
+        json.push("dense_grads/alloc-per-call", s_alloc, Some(((m * n) as f64, "entries")), 1);
+        let mut scratch = ScratchArena::new();
+        let s_arena = time_it(5, 30, || {
+            gw.fill(0.0);
+            ght.fill(0.0);
+            grads_dense_tiled(
+                w.as_slice(), m, ht.as_slice(), n, k, v.as_slice(), 1.0, 1.0,
+                false, &mut gw, &mut ght, &mut scratch,
+            );
+        });
+        report("dense_grads/arena-reuse", s_arena, Some(((m * n) as f64, "entries")));
+        json.push("dense_grads/arena-reuse", s_arena, Some(((m * n) as f64, "entries")), 1);
+        let s_nonneg = time_it(5, 30, || {
+            gw.fill(0.0);
+            ght.fill(0.0);
+            grads_dense_tiled(
+                w.as_slice(), m, ht.as_slice(), n, k, v.as_slice(), 1.0, 1.0,
+                true, &mut gw, &mut ght, &mut scratch,
+            );
+        });
+        report("dense_grads/arena+nonneg", s_nonneg, Some(((m * n) as f64, "entries")));
+        json.push("dense_grads/arena+nonneg", s_nonneg, Some(((m * n) as f64, "entries")), 1);
+        println!(
+            "arena reuse speedup over alloc-per-call: {:.2}x (nonneg path {:.2}x)",
+            s_alloc / s_arena,
+            s_alloc / s_nonneg
+        );
     }
 
     header("sparse block gradients (movielens-like block, K=50)");
@@ -52,9 +102,21 @@ fn main() {
     let s = time_it(3, 20, || {
         gw.fill(0.0);
         ght.fill(0.0);
-        grads_sparse_core(w.as_slice(), ht.as_slice(), 50, blk, 1.0, 1.0, &mut gw, &mut ght);
+        grads_sparse_core(
+            w.as_slice(), ht.as_slice(), 50, blk, 1.0, 1.0, false, &mut gw, &mut ght,
+        );
     });
     report("sparse_grads/K=50", s, Some((blk.nnz() as f64, "nnz")));
+    json.push("sparse_grads/K=50", s, Some((blk.nnz() as f64, "nnz")), 1);
+    let s = time_it(3, 20, || {
+        gw.fill(0.0);
+        ght.fill(0.0);
+        grads_sparse_core(
+            w.as_slice(), ht.as_slice(), 50, blk, 1.0, 1.0, true, &mut gw, &mut ght,
+        );
+    });
+    report("sparse_grads/K=50+nonneg-hint", s, Some((blk.nnz() as f64, "nnz")));
+    json.push("sparse_grads/K=50+nonneg-hint", s, Some((blk.nnz() as f64, "nnz")), 1);
 
     header("SGLD apply (drift + Langevin noise + mirror)");
     for &len in &[1usize << 14, 1 << 18, 1 << 21] {
@@ -64,6 +126,7 @@ fn main() {
             sgld_apply_core(&mut x, &g, 0.01, 1.0, 1.0, true, &mut rng);
         });
         report(&format!("sgld_apply/{len}"), s, Some((len as f64, "entries")));
+        json.push(&format!("sgld_apply/{len}"), s, Some((len as f64, "entries")), 1);
     }
 
     header("distribution samplers");
@@ -127,5 +190,8 @@ fn main() {
                 .unwrap();
         });
         report("part_update dispatch", s, Some(((4 * 32 * 32) as f64, "entries")));
+        json.push("part_update_dispatch", s, Some(((4 * 32 * 32) as f64, "entries")), 1);
     }
+
+    json.write();
 }

@@ -31,9 +31,10 @@ use crate::kernels::{grads_sparse_core, sgld_apply_core};
 use crate::linalg::Mat;
 use crate::metrics::Trace;
 use crate::model::NmfModel;
-use crate::partition::PartScheduler;
+use crate::partition::{Part, PartScheduler};
 use crate::rng::Rng;
 use crate::samplers::FactorState;
+use crate::util::parallel::{default_threads, SendPtr, WorkerPool};
 use crate::Result;
 
 /// Network cost model of the simulated cluster.
@@ -183,6 +184,16 @@ pub fn psgld_distributed_full(
     let mut state = FactorState::from_prior(model, grid.rows(), grid.cols(), &mut rng);
     let mut scheduler = PartScheduler::new(run.schedule, b);
 
+    // Persistent per-"node" resources: the simulated nodes run on the
+    // worker pool, with per-block gradient buffers reused every
+    // iteration (the steady-state loop allocates nothing).
+    let max_n = (0..b).map(|bj| grid.col_range(bj).len()).max().unwrap_or(0);
+    let mut scratch: Vec<(Vec<f32>, Vec<f32>)> = (0..b)
+        .map(|bi| (vec![0f32; grid.row_range(bi).len() * k], vec![0f32; max_n * k]))
+        .collect();
+    let mut pool = WorkerPool::new(default_threads().min(b));
+    let mut part = Part::identity(b);
+
     let mut vclock = 0.0f64;
     let (mut comm_s, mut compute_s) = (0.0f64, 0.0f64);
     let mut trace = Trace::new("psgld_dist");
@@ -190,33 +201,53 @@ pub fn psgld_distributed_full(
 
     for t in 1..=run.t_total {
         let mut step_rng = Rng::derive(seed, &[t, 0xcafe]);
-        let part = scheduler.next_part(&mut step_rng);
+        scheduler.next_part_into(&mut step_rng, &mut part);
         let eps = run.step.eps(t) as f32;
         let scale = blocked.scale(&part);
 
         // --- compute phase: nodes run their blocks concurrently -------
+        // virtual-time accounting stays serial (cheap), the actual block
+        // updates fan out over the pool with the same RNG tagging as the
+        // shared-memory PSGLD, so the chain stays bitwise identical.
         let mut max_node_time = 0.0f64;
         for bi in 0..b {
             let bj = part.perm[bi];
-            let blk = blocked.block(bi, bj);
-            let rows = grid.row_range(bi);
-            let cols = grid.col_range(bj);
-            let m = rows.len();
-            let n = cols.len();
+            let (m, n) = (grid.row_range(bi).len(), grid.col_range(bj).len());
             max_node_time = max_node_time
-                .max(compute.block_time_s(blk.nnz(), (m + n) * k));
-
-            // the actual update (same RNG tagging as shared-memory PSGLD)
-            let mut gw = vec![0f32; m * k];
-            let mut ght = vec![0f32; n * k];
-            let w_slice = &mut state.w.as_mut_slice()[rows.start * k..rows.end * k];
-            let ht_slice = &mut state.ht.as_mut_slice()[cols.start * k..cols.end * k];
-            grads_sparse_core(
-                w_slice, ht_slice, k, blk, model.beta, model.phi, &mut gw, &mut ght,
-            );
-            let mut brng = Rng::derive(seed, &[t, bi as u64]);
-            sgld_apply_core(w_slice, &gw, eps, scale, model.lam_w, model.mirror, &mut brng);
-            sgld_apply_core(ht_slice, &ght, eps, scale, model.lam_h, model.mirror, &mut brng);
+                .max(compute.block_time_s(blocked.block(bi, bj).nnz(), (m + n) * k));
+        }
+        {
+            let w_ptr = SendPtr::new(state.w.as_mut_slice().as_mut_ptr());
+            let ht_ptr = SendPtr::new(state.ht.as_mut_slice().as_mut_ptr());
+            let scratch_ptr = SendPtr::new(scratch.as_mut_ptr());
+            let (grid, blocked, part) = (&grid, &blocked, &part);
+            pool.for_each_index(b, move |_arena, bi| {
+                let bj = part.perm[bi];
+                let rows = grid.row_range(bi);
+                let cols = grid.col_range(bj);
+                let (m, n) = (rows.len(), cols.len());
+                // SAFETY: row stripes disjoint across bi, column stripes
+                // disjoint across bj = perm[bi] (bijection), scratch[bi]
+                // touched by exactly one task.
+                let w_slice = unsafe {
+                    std::slice::from_raw_parts_mut(w_ptr.get().add(rows.start * k), m * k)
+                };
+                let ht_slice = unsafe {
+                    std::slice::from_raw_parts_mut(ht_ptr.get().add(cols.start * k), n * k)
+                };
+                let sb = unsafe { &mut *scratch_ptr.get().add(bi) };
+                let gw = &mut sb.0[..m * k];
+                let ght = &mut sb.1[..n * k];
+                gw.fill(0.0);
+                ght.fill(0.0);
+                grads_sparse_core(
+                    w_slice, ht_slice, k, blocked.block(bi, bj),
+                    model.beta, model.phi, model.mirror, gw, ght,
+                );
+                let mut brng = Rng::derive(seed, &[t, bi as u64]);
+                sgld_apply_core(w_slice, gw, eps, scale, model.lam_w, model.mirror, &mut brng);
+                sgld_apply_core(ht_slice, ght, eps, scale, model.lam_h, model.mirror, &mut brng);
+            });
         }
 
         // --- communication phase: ring-rotate the H blocks (Fig. 4) ---

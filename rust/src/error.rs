@@ -12,6 +12,7 @@ pub enum Error {
     /// Artifact manifest / runtime errors (missing executable, ...).
     Runtime(String),
     /// Underlying XLA/PJRT error.
+    #[cfg(feature = "xla")]
     Xla(xla::Error),
     /// I/O error (artifact files, CSV output, datasets).
     Io(std::io::Error),
@@ -23,6 +24,7 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            #[cfg(feature = "xla")]
             Error::Xla(e) => write!(f, "xla error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -31,6 +33,7 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e)

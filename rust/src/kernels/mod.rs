@@ -9,7 +9,7 @@
 pub mod native;
 
 pub use native::{
-    dense_block_grads, grads_dense_core, grads_sparse_core, sgd_apply,
-    sgd_apply_core, sgld_apply, sgld_apply_core, sign0, sparse_block_grads,
-    BlockGrads,
+    dense_block_grads, grads_dense_core, grads_dense_tiled, grads_sparse_core,
+    sgd_apply, sgd_apply_core, sgld_apply, sgld_apply_core, sign0,
+    sparse_block_grads, BlockGrads,
 };

@@ -13,6 +13,7 @@ use crate::data::sparse::BlockEntries;
 use crate::linalg::Mat;
 use crate::model::tweedie::{grad_error, loglik_entry, MU_EPS};
 use crate::rng::Rng;
+use crate::util::parallel::ScratchArena;
 
 /// Gradients of the blockwise log-likelihood plus its value.
 #[derive(Clone, Debug)]
@@ -74,14 +75,206 @@ fn accumulate_entry(
     loglik_entry(v, mu, beta, phi) as f64
 }
 
-/// Slice-core dense block gradients. `w` is `m×k`, `ht` is `n×k`, `v` is
-/// `m×n`, all row-major; `gw`/`ght` are zeroed accumulators of matching
-/// size. Returns the blockwise log-likelihood.
+/// L1 budget (bytes) for the `k × JB` panel of `|H|ᵀ` a tile streams.
+const L1_PANEL_BYTES: usize = 16 * 1024;
+/// L1 budget (bytes) for the `IB × JB` error tile.
+const L1_ETILE_BYTES: usize = 8 * 1024;
+
+/// Tile shape `(IB, JB)` for [`grads_dense_tiled`]: JB columns so the
+/// `k × JB` `|H|ᵀ` panel stays L1-resident, IB rows so the `IB × JB`
+/// error tile does too (see EXPERIMENTS.md §Perf for the derivation).
+fn tile_shape(k: usize) -> (usize, usize) {
+    let jb = (L1_PANEL_BYTES / 4 / k.max(1)).clamp(32, 256);
+    let ib = (L1_ETILE_BYTES / 4 / jb).clamp(8, 64);
+    (ib, jb)
+}
+
+/// 4-accumulator unrolled dot product (breaks the FP dependency chain so
+/// the compiler can keep 4 FMA pipes busy without `-ffast-math`).
+#[inline]
+fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let quads = a.len() / 4;
+    for q in 0..quads {
+        let i = 4 * q;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * quads..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Cache-tiled, allocation-free dense block gradients — the PSGLD hot
+/// path. `w` is `m×k`, `ht` is `n×k`, `v` is `m×n`, all row-major;
+/// `gw`/`ght` are **zeroed** accumulators of matching size; temporaries
+/// live in `scratch` (grow-only, so the steady state allocates nothing).
+/// Returns the blockwise log-likelihood.
 ///
-/// §Perf: three-pass GEMM structure (mu = |W||H| → elementwise E → two
-/// rank-updates) instead of the naive per-entry loop — every inner loop
-/// streams contiguous rows and auto-vectorises; ~2-3x over the
-/// entrywise form at K = 32 (see EXPERIMENTS.md §Perf).
+/// `nonneg` is the mirror fast path: when the caller guarantees
+/// `w, ht ≥ 0` (the mirroring step keeps the exponential-prior state
+/// non-negative), `|x| = x` and `sign(x) ∈ {0, 1}`, so the `|W|` copy
+/// and per-entry sign multiplies collapse to a final zero-kill. The two
+/// paths are bitwise identical on non-negative inputs.
+///
+/// §Perf: instead of three full GEMM-shaped passes over an `m×n` error
+/// buffer, the work is fused per `IB × JB` tile — mu (unrolled-by-4 K
+/// loop) → elementwise ll/E → both rank-updates — while the error tile
+/// is still L1-hot; sign corrections are applied once at the end, which
+/// is exact because multiplying the summed accumulator by
+/// `sign ∈ {-1, 0, 1}` distributes over the addition. Before/after
+/// numbers in EXPERIMENTS.md §Perf.
+#[allow(clippy::too_many_arguments)]
+pub fn grads_dense_tiled(
+    w: &[f32],
+    m: usize,
+    ht: &[f32],
+    n: usize,
+    k: usize,
+    v: &[f32],
+    beta: f32,
+    phi: f32,
+    nonneg: bool,
+    gw: &mut [f32],
+    ght: &mut [f32],
+    scratch: &mut ScratchArena,
+) -> f64 {
+    debug_assert_eq!(w.len(), m * k);
+    debug_assert_eq!(ht.len(), n * k);
+    debug_assert_eq!(v.len(), m * n);
+    debug_assert_eq!(gw.len(), m * k);
+    debug_assert_eq!(ght.len(), n * k);
+
+    let (ib, jb) = tile_shape(k);
+    let (wabs_buf, habs_t, etile) =
+        scratch.take3(if nonneg { 0 } else { m * k }, k * n, ib * jb);
+
+    // |W| (m×k); the fast path reads w directly (|x| = x).
+    let wa: &[f32] = if nonneg {
+        w
+    } else {
+        for (dst, &x) in wabs_buf.iter_mut().zip(w.iter()) {
+            *dst = x.abs();
+        }
+        wabs_buf
+    };
+    // |H| stored K-major (k×n): habs_t[kk*n + j] = |ht[j*k + kk]|. One
+    // transposed copy per block so every inner loop streams contiguously.
+    for kk in 0..k {
+        let row = &mut habs_t[kk * n..(kk + 1) * n];
+        for (j, dst) in row.iter_mut().enumerate() {
+            let x = ht[j * k + kk];
+            *dst = if nonneg { x } else { x.abs() };
+        }
+    }
+
+    let mut ll = 0.0f64;
+    let mut i0 = 0;
+    while i0 < m {
+        let mi = (i0 + ib).min(m) - i0;
+        let mut j0 = 0;
+        while j0 < n {
+            let nj = (j0 + jb).min(n) - j0;
+
+            // mu tile: E[ii][jj] = MU_EPS + Σ_kk |W|[i0+ii][kk] |H|[kk][j0+jj]
+            for ii in 0..mi {
+                let erow = &mut etile[ii * nj..(ii + 1) * nj];
+                erow.fill(MU_EPS);
+                let warow = &wa[(i0 + ii) * k..(i0 + ii) * k + k];
+                let mut kk = 0;
+                while kk + 4 <= k {
+                    let (a0, a1, a2, a3) =
+                        (warow[kk], warow[kk + 1], warow[kk + 2], warow[kk + 3]);
+                    let h0 = &habs_t[kk * n + j0..kk * n + j0 + nj];
+                    let h1 = &habs_t[(kk + 1) * n + j0..(kk + 1) * n + j0 + nj];
+                    let h2 = &habs_t[(kk + 2) * n + j0..(kk + 2) * n + j0 + nj];
+                    let h3 = &habs_t[(kk + 3) * n + j0..(kk + 3) * n + j0 + nj];
+                    for jj in 0..nj {
+                        erow[jj] += a0 * h0[jj] + a1 * h1[jj] + a2 * h2[jj] + a3 * h3[jj];
+                    }
+                    kk += 4;
+                }
+                while kk < k {
+                    let a = warow[kk];
+                    let hrow = &habs_t[kk * n + j0..kk * n + j0 + nj];
+                    for (ev, &hv) in erow.iter_mut().zip(hrow.iter()) {
+                        *ev += a * hv;
+                    }
+                    kk += 1;
+                }
+            }
+
+            // ll + error transform in place, while the tile is L1-hot
+            for ii in 0..mi {
+                let erow = &mut etile[ii * nj..(ii + 1) * nj];
+                let vrow = &v[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nj];
+                for (ev, &vv) in erow.iter_mut().zip(vrow.iter()) {
+                    let mu = *ev;
+                    ll += loglik_entry(vv, mu, beta, phi) as f64;
+                    *ev = grad_error(vv, mu, beta, phi);
+                }
+            }
+
+            // GW[i][kk] += Σ_jj E[ii][jj] |H|[kk][j0+jj]
+            for ii in 0..mi {
+                let erow = &etile[ii * nj..(ii + 1) * nj];
+                let gwrow = &mut gw[(i0 + ii) * k..(i0 + ii) * k + k];
+                for (kk, g) in gwrow.iter_mut().enumerate() {
+                    let hrow = &habs_t[kk * n + j0..kk * n + j0 + nj];
+                    *g += dot_unrolled(erow, hrow);
+                }
+            }
+
+            // GHt[j][kk] += Σ_ii E[ii][jj] |W|[i0+ii][kk]
+            for ii in 0..mi {
+                let erow = &etile[ii * nj..(ii + 1) * nj];
+                let warow = &wa[(i0 + ii) * k..(i0 + ii) * k + k];
+                for (jj, &ev) in erow.iter().enumerate() {
+                    let ghtrow = &mut ght[(j0 + jj) * k..(j0 + jj) * k + k];
+                    for (g, &wv) in ghtrow.iter_mut().zip(warow.iter()) {
+                        *g += ev * wv;
+                    }
+                }
+            }
+            j0 += nj;
+        }
+        i0 += mi;
+    }
+
+    // sign corrections, once at the end over the accumulated totals
+    if nonneg {
+        // sign ∈ {0, 1}: only exact zeros (measure-zero) need killing
+        for (g, &x) in gw.iter_mut().zip(w.iter()) {
+            if x == 0.0 {
+                *g = 0.0;
+            }
+        }
+        for (g, &x) in ght.iter_mut().zip(ht.iter()) {
+            if x == 0.0 {
+                *g = 0.0;
+            }
+        }
+    } else {
+        for (g, &x) in gw.iter_mut().zip(w.iter()) {
+            *g *= sign0(x);
+        }
+        for (g, &x) in ght.iter_mut().zip(ht.iter()) {
+            *g *= sign0(x);
+        }
+    }
+    ll
+}
+
+/// Slice-core dense block gradients — allocating convenience wrapper
+/// over [`grads_dense_tiled`] (fresh scratch, no non-negativity
+/// assumption). The pool-driven samplers call the tiled core directly
+/// with per-worker arenas; this wrapper serves one-shot callers and is
+/// the per-call-allocation baseline the benches compare against.
 #[allow(clippy::too_many_arguments)]
 pub fn grads_dense_core(
     w: &[f32],
@@ -95,81 +288,18 @@ pub fn grads_dense_core(
     gw: &mut [f32],
     ght: &mut [f32],
 ) -> f64 {
-    debug_assert_eq!(w.len(), m * k);
-    debug_assert_eq!(ht.len(), n * k);
-    debug_assert_eq!(v.len(), m * n);
-    debug_assert_eq!(gw.len(), m * k);
-    debug_assert_eq!(ght.len(), n * k);
-
-    // |W| (m×k) and |H| stored K-major as k×n for the mu GEMM.
-    let wabs: Vec<f32> = w.iter().map(|x| x.abs()).collect();
-    let mut habs_t = vec![0f32; k * n]; // habs_t[kk*n + j] = |ht[j*k + kk]|
-    for j in 0..n {
-        for kk in 0..k {
-            habs_t[kk * n + j] = ht[j * k + kk].abs();
-        }
-    }
-
-    // pass 1: mu = |W| @ |H|  (i-k-j; inner streams habs_t and e rows)
-    let mut e = vec![MU_EPS; m * n];
-    for i in 0..m {
-        let erow = &mut e[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let a = wabs[i * k + kk];
-            let hrow = &habs_t[kk * n..(kk + 1) * n];
-            for (ev, &hv) in erow.iter_mut().zip(hrow.iter()) {
-                *ev += a * hv;
-            }
-        }
-    }
-
-    // pass 2: ll and E = (v - mu) mu^{beta-2} / phi, in place
-    let mut ll = 0.0f64;
-    for (ev, &vv) in e.iter_mut().zip(v.iter()) {
-        let mu = *ev;
-        ll += loglik_entry(vv, mu, beta, phi) as f64;
-        *ev = grad_error(vv, mu, beta, phi);
-    }
-
-    // pass 3a: GW[i][kk] = sign(w) * Σ_j E[i][j] |H|[kk][j]
-    for i in 0..m {
-        let erow = &e[i * n..(i + 1) * n];
-        let gwrow = &mut gw[i * k..(i + 1) * k];
-        let wrow = &w[i * k..(i + 1) * k];
-        for kk in 0..k {
-            let hrow = &habs_t[kk * n..(kk + 1) * n];
-            let mut acc = 0f32;
-            for (&ev, &hv) in erow.iter().zip(hrow.iter()) {
-                acc += ev * hv;
-            }
-            gwrow[kk] += sign0(wrow[kk]) * acc;
-        }
-    }
-
-    // pass 3b: GHt[j][kk] = sign(ht) * Σ_i E[i][j] |W|[i][kk]
-    for i in 0..m {
-        let erow = &e[i * n..(i + 1) * n];
-        let warow = &wabs[i * k..(i + 1) * k];
-        for (j, &ev) in erow.iter().enumerate() {
-            let ghtrow = &mut ght[j * k..(j + 1) * k];
-            for (g, &wv) in ghtrow.iter_mut().zip(warow.iter()) {
-                *g += ev * wv;
-            }
-        }
-    }
-    // sign correction for GHt (applied once, after accumulation)
-    for (g, &hv) in ght.iter_mut().zip(ht.iter()) {
-        *g *= sign0(hv);
-    }
-    ll
+    let mut scratch = ScratchArena::new();
+    grads_dense_tiled(w, m, ht, n, k, v, beta, phi, false, gw, ght, &mut scratch)
 }
 
 /// Slice-core sparse block gradients over a local-index COO block.
 ///
 /// §Perf: when the mirroring step is active the factor state is
-/// guaranteed non-negative, so `|x| = x` and `sign(x) ∈ {0, 1}` — the
-/// fast path detects this once per block (O((m+n)k) scan vs O(nnz·k)
-/// work) and runs a branch-free FMA inner loop.
+/// guaranteed non-negative, so `|x| = x` and `sign(x) ∈ {0, 1}` and the
+/// branch-free FMA inner loop applies. Callers that know this statically
+/// (the samplers plumb `model.mirror` through as `nonneg`) skip the
+/// O((m+n)·K) detection scan entirely; `nonneg = false` falls back to
+/// detecting it per block when the scan is cheaper than the nnz·K work.
 #[allow(clippy::too_many_arguments)]
 pub fn grads_sparse_core(
     w: &[f32],
@@ -178,12 +308,14 @@ pub fn grads_sparse_core(
     blk: &BlockEntries,
     beta: f32,
     phi: f32,
+    nonneg: bool,
     gw: &mut [f32],
     ght: &mut [f32],
 ) -> f64 {
-    let nonneg = blk.vals.len() > w.len() + ht.len()
-        && w.iter().all(|&x| x >= 0.0)
-        && ht.iter().all(|&x| x >= 0.0);
+    let nonneg = nonneg
+        || (blk.vals.len() > w.len() + ht.len()
+            && w.iter().all(|&x| x >= 0.0)
+            && ht.iter().all(|&x| x >= 0.0));
     let mut ll = 0.0f64;
     if nonneg {
         for idx in 0..blk.vals.len() {
@@ -313,6 +445,7 @@ pub fn sparse_block_grads(
         blk,
         beta,
         phi,
+        false,
         out.gw.as_mut_slice(),
         out.ght.as_mut_slice(),
     );
@@ -463,6 +596,107 @@ mod tests {
             let expect = eps
                 * (2.0 * g.as_slice()[idx] - 0.5 * sign0(w.as_slice()[idx]));
             assert!((drift - expect).abs() < 1e-6, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn tiled_matches_reference_at_tile_boundaries() {
+        // shapes straddling the IB/JB edges (tile_shape(6) = clamped
+        // values well below these dims) exercise partial tiles on both
+        // axes, including single-row / single-column remainders.
+        for &(m, n) in &[(1usize, 1usize), (7, 260), (65, 257), (40, 33)] {
+            let (w, ht, v) = setup(m, n, 6);
+            let a = dense_block_grads(&w, &ht, &v, 1.0, 1.0);
+            let b = gemm_reference(&w, &ht, &v, 1.0, 1.0);
+            assert!((a.ll - b.ll).abs() < 1e-3 * (m * n) as f64, "{m}x{n}");
+            assert!(a.gw.frob_dist(&b.gw) < 1e-3, "{m}x{n}");
+            assert!(a.ght.frob_dist(&b.ght) < 1e-3, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn tiled_nonneg_fast_path_is_bitwise_identical() {
+        // setup() draws from U(0.1, 1.0) so the inputs are strictly
+        // positive; the fast path must agree bit-for-bit, not just
+        // within tolerance.
+        let (w, ht, v) = setup(33, 41, 5);
+        let (m, n, k) = (33, 41, 5);
+        let mut scratch = ScratchArena::new();
+        let mut gw_a = vec![0f32; m * k];
+        let mut ght_a = vec![0f32; n * k];
+        let ll_a = grads_dense_tiled(
+            w.as_slice(), m, ht.as_slice(), n, k, v.as_slice(),
+            1.0, 1.0, false, &mut gw_a, &mut ght_a, &mut scratch,
+        );
+        let mut gw_b = vec![0f32; m * k];
+        let mut ght_b = vec![0f32; n * k];
+        let ll_b = grads_dense_tiled(
+            w.as_slice(), m, ht.as_slice(), n, k, v.as_slice(),
+            1.0, 1.0, true, &mut gw_b, &mut ght_b, &mut scratch,
+        );
+        assert_eq!(ll_a, ll_b);
+        assert_eq!(gw_a, gw_b);
+        assert_eq!(ght_a, ght_b);
+    }
+
+    #[test]
+    fn tiled_is_stable_under_arena_reuse() {
+        // the arena hands back uninitialised (stale) memory; a second
+        // call with a dirty arena must still produce identical output
+        let (w, ht, v) = setup(20, 24, 4);
+        let (m, n, k) = (20, 24, 4);
+        let mut scratch = ScratchArena::new();
+        let run = |scratch: &mut ScratchArena| {
+            let mut gw = vec![0f32; m * k];
+            let mut ght = vec![0f32; n * k];
+            let ll = grads_dense_tiled(
+                w.as_slice(), m, ht.as_slice(), n, k, v.as_slice(),
+                0.5, 1.0, false, &mut gw, &mut ght, scratch,
+            );
+            (ll, gw, ght)
+        };
+        let first = run(&mut scratch);
+        let second = run(&mut scratch);
+        assert_eq!(first.0, second.0);
+        assert_eq!(first.1, second.1);
+        assert_eq!(first.2, second.2);
+    }
+
+    #[test]
+    fn sparse_nonneg_hint_matches_unhinted() {
+        let (w, ht, v) = setup(12, 9, 3);
+        let mut trip: Vec<(u32, u32, f32)> = Vec::new();
+        for i in 0..12u32 {
+            for j in 0..9u32 {
+                if (i + j) % 3 == 0 {
+                    trip.push((i, j, v.get(i as usize, j as usize)));
+                }
+            }
+        }
+        let csr = Csr::from_triplets(12, 9, &mut trip).unwrap();
+        let bs = crate::data::BlockedSparse::from_csr(&csr, 1).unwrap();
+        let blk = bs.block(0, 0);
+        let k = 3;
+        let run = |hint: bool| {
+            let mut gw = vec![0f32; 12 * k];
+            let mut ght = vec![0f32; 9 * k];
+            let ll = grads_sparse_core(
+                w.as_slice(), ht.as_slice(), k, blk, 1.0, 1.0, hint,
+                &mut gw, &mut ght,
+            );
+            (ll, gw, ght)
+        };
+        // strictly positive inputs: hinted fast path vs the generic
+        // per-entry path must agree to tolerance (the hint only changes
+        // which inner loop runs, not what it computes)
+        let (ll_h, gw_h, ght_h) = run(true);
+        let (ll_u, gw_u, ght_u) = run(false);
+        assert!((ll_h - ll_u).abs() < 1e-6);
+        for (a, b) in gw_h.iter().zip(gw_u.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in ght_h.iter().zip(ght_u.iter()) {
+            assert!((a - b).abs() < 1e-5);
         }
     }
 

@@ -14,9 +14,13 @@
 //! * **Layer 1 (python/compile/kernels/)** — the Pallas β-divergence
 //!   gradient kernel the L2 functions call.
 //!
-//! The compiled artifacts in `artifacts/` are loaded at runtime through
-//! [`runtime`] (PJRT CPU via the `xla` crate); Python never runs on the
-//! sampling path.
+//! The native Rust path is the default and is self-contained: the
+//! shared-memory sampler runs the cache-tiled kernels of [`kernels`] on
+//! a persistent worker pool ([`util::parallel`]) with zero steady-state
+//! heap allocations. The compiled artifacts in `artifacts/` are loaded
+//! at runtime through [`runtime`] (PJRT CPU via the `xla` crate, behind
+//! the `xla` cargo feature — off by default since that crate cannot be
+//! built offline); Python never runs on the sampling path.
 //!
 //! ## Quickstart
 //!

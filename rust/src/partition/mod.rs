@@ -132,19 +132,45 @@ pub struct Part {
 }
 
 impl Part {
+    /// Identity part `σ(b) = b` — the usual starting point for the
+    /// in-place `set_*` updates below.
+    pub fn identity(b: usize) -> Self {
+        Part { perm: (0..b).collect() }
+    }
+
     /// Cyclic-shift part `σ_p(b) = (b + p) mod B`.
     pub fn cyclic(b: usize, p: usize) -> Self {
-        Part { perm: (0..b).map(|i| (i + p) % b).collect() }
+        let mut part = Part::identity(b);
+        part.set_cyclic(p);
+        part
+    }
+
+    /// Overwrite in place with the cyclic-shift part `σ_p` (no alloc).
+    pub fn set_cyclic(&mut self, p: usize) {
+        let b = self.perm.len();
+        for (i, v) in self.perm.iter_mut().enumerate() {
+            *v = (i + p) % b;
+        }
     }
 
     /// Uniformly random permutation part (DSGD-style stratum).
     pub fn random(b: usize, rng: &mut Rng) -> Self {
-        let mut perm: Vec<usize> = (0..b).collect();
+        let mut part = Part::identity(b);
+        part.set_random(rng);
+        part
+    }
+
+    /// Overwrite in place with a uniformly random permutation (no
+    /// alloc). Consumes exactly the same RNG draws as [`Part::random`].
+    pub fn set_random(&mut self, rng: &mut Rng) {
+        let b = self.perm.len();
+        for (i, v) in self.perm.iter_mut().enumerate() {
+            *v = i;
+        }
         for i in (1..b).rev() {
             let j = rng.next_below(i as u64 + 1) as usize;
-            perm.swap(i, j);
+            self.perm.swap(i, j);
         }
-        Part { perm }
     }
 
     /// Check the part law: `perm` is a bijection on `0..B`.
@@ -190,16 +216,25 @@ impl PartScheduler {
 
     /// Produce the part for the next iteration.
     pub fn next_part(&mut self, rng: &mut Rng) -> Part {
+        let mut part = Part::identity(self.b);
+        self.next_part_into(rng, &mut part);
+        part
+    }
+
+    /// Allocation-free variant: overwrite `part` with the next part.
+    /// Consumes exactly the same RNG draws as [`Self::next_part`], so
+    /// the two are interchangeable without perturbing the chain.
+    pub fn next_part_into(&mut self, rng: &mut Rng, part: &mut Part) {
+        debug_assert_eq!(part.perm.len(), self.b);
         match self.schedule {
             PartSchedule::Cyclic => {
-                let p = Part::cyclic(self.b, self.next_shift);
+                part.set_cyclic(self.next_shift);
                 self.next_shift = (self.next_shift + 1) % self.b;
-                p
             }
             PartSchedule::RandomShift => {
-                Part::cyclic(self.b, rng.next_below(self.b as u64) as usize)
+                part.set_cyclic(rng.next_below(self.b as u64) as usize);
             }
-            PartSchedule::RandomPerm => Part::random(self.b, rng),
+            PartSchedule::RandomPerm => part.set_random(rng),
         }
     }
 }
@@ -290,6 +325,28 @@ mod tests {
         assert_eq!(parts[1], Part::cyclic(3, 1));
         assert_eq!(parts[2], Part::cyclic(3, 2));
         assert_eq!(parts[3], parts[0]);
+    }
+
+    #[test]
+    fn next_part_into_matches_next_part_for_every_schedule() {
+        for sched in [
+            PartSchedule::Cyclic,
+            PartSchedule::RandomShift,
+            PartSchedule::RandomPerm,
+        ] {
+            let mut rng_a = Rng::seed_from(11);
+            let mut rng_b = Rng::seed_from(11);
+            let mut s_a = PartScheduler::new(sched, 5);
+            let mut s_b = PartScheduler::new(sched, 5);
+            let mut reused = Part::identity(5);
+            for step in 0..12 {
+                let fresh = s_a.next_part(&mut rng_a);
+                s_b.next_part_into(&mut rng_b, &mut reused);
+                assert_eq!(fresh, reused, "{sched:?} step {step}");
+            }
+            // identical RNG consumption: streams still aligned
+            assert_eq!(rng_a.next_below(1_000_003), rng_b.next_below(1_000_003));
+        }
     }
 
     #[test]

@@ -5,18 +5,29 @@
 //! Python never runs here — the artifacts are self-contained HLO
 //! programs with the Pallas kernel, the Langevin noise (threefry from a
 //! `u32[2]` seed input) and the mirroring step already lowered in.
+//!
+//! The `xla` crate is an optional dependency (feature `xla`): it cannot
+//! be built in offline environments, so without the feature this module
+//! compiles a stub [`XlaRuntime`] whose constructor still validates the
+//! manifest but then reports that the backend is unavailable. Everything
+//! that consumes the runtime (coordinator, tests, benches) gates on
+//! `XlaRuntime::new` succeeding, so the native path is unaffected.
 
 pub mod manifest;
 
 pub use manifest::{ArtifactEntry, ArtifactKind, Dtype, IoSpec, Manifest};
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::Path;
 
 use crate::linalg::StackedBlocks;
-use crate::{Error, Result};
+#[cfg(feature = "xla")]
+use crate::Error;
+use crate::Result;
 
 /// Compiled-executable cache over the artifact manifest.
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -24,6 +35,7 @@ pub struct XlaRuntime {
 }
 
 /// Build an `f32` tensor literal from a flat slice + dims.
+#[cfg(feature = "xla")]
 fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     debug_assert_eq!(data.len(), dims.iter().product::<usize>());
     let bytes = unsafe {
@@ -37,15 +49,18 @@ fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Scalar f32 literal.
+#[cfg(feature = "xla")]
 fn literal_scalar(v: f32) -> xla::Literal {
     xla::Literal::from(v)
 }
 
 /// `u32[2]` seed literal.
+#[cfg(feature = "xla")]
 fn literal_seed(seed: [u32; 2]) -> xla::Literal {
     xla::Literal::vec1(&seed)
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Create a CPU PJRT client and load the manifest from `dir`.
     pub fn new(dir: &Path) -> Result<Self> {
@@ -193,7 +208,90 @@ impl XlaRuntime {
     }
 }
 
-#[cfg(test)]
+/// Stub runtime compiled when the `xla` feature is off: validates the
+/// manifest (so error paths stay testable) and then reports that the
+/// backend is unavailable. `new` never returns `Ok`, so the remaining
+/// methods are unreachable but keep the call sites compiling.
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+fn backend_unavailable<T>() -> Result<T> {
+    Err(crate::Error::Runtime(
+        "XLA/PJRT backend not compiled in — rebuild with `--features xla` \
+         (requires the `xla` crate, unavailable offline)"
+            .into(),
+    ))
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    /// Load the manifest from `dir`, then fail: the PJRT client needs
+    /// the `xla` feature.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let _manifest = Manifest::load(dir)?;
+        backend_unavailable()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn prepare(&mut self, _name: &str) -> Result<()> {
+        backend_unavailable()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn part_update(
+        &mut self,
+        _entry_name: &str,
+        _ws: &StackedBlocks,
+        _hs: &StackedBlocks,
+        _vs: &StackedBlocks,
+        _eps: f32,
+        _scale: f32,
+        _lam_w: f32,
+        _lam_h: f32,
+        _seed: [u32; 2],
+    ) -> Result<(StackedBlocks, StackedBlocks)> {
+        backend_unavailable()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn ld_update(
+        &mut self,
+        _entry_name: &str,
+        _w: &[f32],
+        _h: &[f32],
+        _v: &[f32],
+        _dims: (usize, usize, usize),
+        _eps: f32,
+        _lam_w: f32,
+        _lam_h: f32,
+        _seed: [u32; 2],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        backend_unavailable()
+    }
+
+    pub fn loglik(
+        &mut self,
+        _entry_name: &str,
+        _w: &[f32],
+        _h: &[f32],
+        _v: &[f32],
+        _dims: (usize, usize, usize),
+    ) -> Result<f64> {
+        backend_unavailable()
+    }
+}
+
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
 
@@ -209,5 +307,26 @@ mod tests {
         assert_eq!(s.to_vec::<u32>().unwrap(), vec![7, 9]);
         let sc = literal_scalar(2.5);
         assert_eq!(sc.get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn stub_reports_missing_backend() {
+        // compiled out here; the stub variant is exercised in the
+        // default build via `stub_error_mentions_feature` below.
+    }
+}
+
+#[cfg(all(test, not(feature = "xla")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_error_mentions_feature() {
+        // a directory with a valid manifest would still fail with the
+        // feature hint; a missing dir fails earlier with the make hint
+        let err = XlaRuntime::new(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+        let err: crate::Error = backend_unavailable::<()>().unwrap_err();
+        assert!(format!("{err}").contains("--features xla"));
     }
 }

@@ -15,13 +15,13 @@
 //! observations).
 
 use crate::config::RunConfig;
-use crate::kernels::{grads_dense_core, sgld_apply_core};
+use crate::kernels::{grads_dense_tiled, sgld_apply_core};
 use crate::linalg::Mat;
 use crate::model::NmfModel;
-use crate::partition::{GridPartition, PartScheduler};
+use crate::partition::{GridPartition, Part, PartScheduler};
 use crate::rng::Rng;
 use crate::samplers::{FactorState, Sampler};
-use crate::util::parallel::{default_threads, par_for_each_mut};
+use crate::util::parallel::{default_threads, ScratchArena, SendPtr, WorkerPool};
 
 /// Shared-dictionary coupled factorisation state.
 #[derive(Clone, Debug)]
@@ -48,7 +48,14 @@ pub struct CoupledPsgld {
     sched2: PartScheduler,
     run_cfg: RunConfig,
     seed: u64,
-    threads: usize,
+    /// Persistent workers (with per-worker kernel scratch arenas).
+    pool: WorkerPool,
+    /// Reusable part buffers, one per observed matrix.
+    part1: Part,
+    part2: Part,
+    /// Per-block gradient accumulators `(gw, gw2, g1, g2)`, reused
+    /// across iterations.
+    scratch: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>,
     /// Exposed (W, H1) view for the `Sampler` trait.
     exposed: FactorState,
 }
@@ -88,18 +95,35 @@ impl CoupledPsgld {
         let ht2 = Mat::exponential(v2.cols(), model.k, model.lam_h as f64, &mut rng);
         let state = CoupledState { w, ht1, ht2 };
         let exposed = FactorState { w: state.w.clone(), ht: state.ht1.clone() };
+        let k = model.k;
+        let max_n1 = (0..b).map(|bj| grid1.col_range(bj).len()).max().unwrap_or(0);
+        let max_n2 = (0..b).map(|bj| grid2.col_range(bj).len()).max().unwrap_or(0);
+        let scratch = (0..b)
+            .map(|bi| {
+                let m = grid1.row_range(bi).len();
+                (
+                    vec![0f32; m * k],
+                    vec![0f32; m * k],
+                    vec![0f32; max_n1 * k],
+                    vec![0f32; max_n2 * k],
+                )
+            })
+            .collect();
         Ok(CoupledPsgld {
             model: model.clone(),
             v1_blocks: slice(v1, &grid1),
             v2_blocks: slice(v2, &grid2),
-            grid1,
-            grid2,
             state,
             sched1: PartScheduler::new(run.schedule, b),
             sched2: PartScheduler::new(run.schedule, b),
             run_cfg: run,
             seed,
-            threads: default_threads().min(b),
+            pool: WorkerPool::new(default_threads().min(b)),
+            part1: Part::identity(b),
+            part2: Part::identity(b),
+            scratch,
+            grid1,
+            grid2,
             exposed,
         })
     }
@@ -114,39 +138,6 @@ impl CoupledPsgld {
             + self.model.loglik_dense(&self.state.w, &self.state.ht2.transpose(), v2)
     }
 
-    fn stripe_slices<'a>(
-        data: &'a mut [f32],
-        grid: &GridPartition,
-        k: usize,
-        rows: bool,
-    ) -> Vec<&'a mut [f32]> {
-        let b = grid.b();
-        let bounds: Vec<usize> = (0..b)
-            .map(|i| if rows { grid.row_range(i).end } else { grid.col_range(i).end })
-            .collect();
-        let mut out = Vec::new();
-        let mut rest = data;
-        let mut prev = 0usize;
-        for bound in bounds {
-            let (head, tail) = rest.split_at_mut((bound - prev) * k);
-            out.push(head);
-            rest = tail;
-            prev = bound;
-        }
-        out
-    }
-}
-
-struct CoupledTask<'a> {
-    w: &'a mut [f32],
-    m: usize,
-    ht1: &'a mut [f32],
-    n1: usize,
-    ht2: &'a mut [f32],
-    n2: usize,
-    v1: &'a Mat,
-    v2: &'a Mat,
-    rng: Rng,
 }
 
 impl Sampler for CoupledPsgld {
@@ -154,61 +145,82 @@ impl Sampler for CoupledPsgld {
         let b = self.grid1.b();
         let k = self.model.k;
         let mut rng = Rng::derive(self.seed, &[t, 0xc0]);
-        let part1 = self.sched1.next_part(&mut rng);
-        let part2 = self.sched2.next_part(&mut rng);
+        self.sched1.next_part_into(&mut rng, &mut self.part1);
+        self.sched2.next_part_into(&mut rng, &mut self.part2);
         let eps = self.run_cfg.step.eps(t) as f32;
-        let scale1 = self.grid1.scale_dense(&part1);
-        let scale2 = self.grid2.scale_dense(&part2);
+        let scale1 = self.grid1.scale_dense(&self.part1);
+        let scale2 = self.grid2.scale_dense(&self.part2);
 
-        let w_stripes = Self::stripe_slices(self.state.w.as_mut_slice(), &self.grid1, k, true);
-        let ht1_stripes =
-            Self::stripe_slices(self.state.ht1.as_mut_slice(), &self.grid1, k, false);
-        let ht2_stripes =
-            Self::stripe_slices(self.state.ht2.as_mut_slice(), &self.grid2, k, false);
-        let mut s1: Vec<Option<&mut [f32]>> = ht1_stripes.into_iter().map(Some).collect();
-        let mut s2: Vec<Option<&mut [f32]>> = ht2_stripes.into_iter().map(Some).collect();
-
-        let mut tasks: Vec<CoupledTask> = Vec::with_capacity(b);
-        for (bi, w_slice) in w_stripes.into_iter().enumerate() {
-            let bj1 = part1.perm[bi];
-            let bj2 = part2.perm[bi];
-            tasks.push(CoupledTask {
-                w: w_slice,
-                m: self.grid1.row_range(bi).len(),
-                ht1: s1[bj1].take().expect("bijection"),
-                n1: self.grid1.col_range(bj1).len(),
-                ht2: s2[bj2].take().expect("bijection"),
-                n2: self.grid2.col_range(bj2).len(),
-                v1: &self.v1_blocks[bi * b + bj1],
-                v2: &self.v2_blocks[bi * b + bj2],
-                rng: Rng::derive(self.seed, &[t, bi as u64, 0xc0]),
-            });
-        }
+        let w_ptr = SendPtr::new(self.state.w.as_mut_slice().as_mut_ptr());
+        let ht1_ptr = SendPtr::new(self.state.ht1.as_mut_slice().as_mut_ptr());
+        let ht2_ptr = SendPtr::new(self.state.ht2.as_mut_slice().as_mut_ptr());
+        let scratch_ptr = SendPtr::new(self.scratch.as_mut_ptr());
 
         let model = &self.model;
-        par_for_each_mut(&mut tasks, self.threads, |_, task| {
-            let mut gw = vec![0f32; task.m * k];
-            let mut gw2 = vec![0f32; task.m * k];
-            let mut g1 = vec![0f32; task.n1 * k];
-            let mut g2 = vec![0f32; task.n2 * k];
-            grads_dense_core(
-                task.w, task.m, task.ht1, task.n1, k,
-                task.v1.as_slice(), model.beta, model.phi, &mut gw, &mut g1,
+        let grid1 = &self.grid1;
+        let grid2 = &self.grid2;
+        let part1 = &self.part1;
+        let part2 = &self.part2;
+        let v1_blocks = &self.v1_blocks;
+        let v2_blocks = &self.v2_blocks;
+        let seed = self.seed;
+
+        self.pool.for_each_index(b, move |arena: &mut ScratchArena, bi: usize| {
+            let bj1 = part1.perm[bi];
+            let bj2 = part2.perm[bi];
+            let rows = grid1.row_range(bi);
+            let cols1 = grid1.col_range(bj1);
+            let cols2 = grid2.col_range(bj2);
+            let (m, n1, n2) = (rows.len(), cols1.len(), cols2.len());
+            // SAFETY: W row stripes are disjoint across bi; H1/H2 column
+            // stripes are disjoint across bj1 = part1.perm[bi] (resp.
+            // part2) because the part permutations are bijections;
+            // scratch[bi] is touched by exactly one task.
+            let w = unsafe {
+                std::slice::from_raw_parts_mut(w_ptr.get().add(rows.start * k), m * k)
+            };
+            let ht1 = unsafe {
+                std::slice::from_raw_parts_mut(ht1_ptr.get().add(cols1.start * k), n1 * k)
+            };
+            let ht2 = unsafe {
+                std::slice::from_raw_parts_mut(ht2_ptr.get().add(cols2.start * k), n2 * k)
+            };
+            let sb = unsafe { &mut *scratch_ptr.get().add(bi) };
+            let gw = &mut sb.0[..m * k];
+            let gw2 = &mut sb.1[..m * k];
+            let g1 = &mut sb.2[..n1 * k];
+            let g2 = &mut sb.3[..n2 * k];
+            gw.fill(0.0);
+            gw2.fill(0.0);
+            g1.fill(0.0);
+            g2.fill(0.0);
+            grads_dense_tiled(
+                w, m, ht1, n1, k, v1_blocks[bi * b + bj1].as_slice(),
+                model.beta, model.phi, model.mirror, gw, g1, arena,
             );
-            grads_dense_core(
-                task.w, task.m, task.ht2, task.n2, k,
-                task.v2.as_slice(), model.beta, model.phi, &mut gw2, &mut g2,
+            grads_dense_tiled(
+                w, m, ht2, n2, k, v2_blocks[bi * b + bj2].as_slice(),
+                model.beta, model.phi, model.mirror, gw2, g2, arena,
             );
             // W feels both (debiased) data terms
             for (a, &x) in gw.iter_mut().zip(gw2.iter()) {
                 *a = scale1 * *a + scale2 * x;
             }
-            sgld_apply_core(task.w, &gw, eps, 1.0, model.lam_w, model.mirror, &mut task.rng);
-            sgld_apply_core(task.ht1, &g1, eps, scale1, model.lam_h, model.mirror, &mut task.rng);
-            sgld_apply_core(task.ht2, &g2, eps, scale2, model.lam_h, model.mirror, &mut task.rng);
+            let mut brng = Rng::derive(seed, &[t, bi as u64, 0xc0]);
+            sgld_apply_core(w, gw, eps, 1.0, model.lam_w, model.mirror, &mut brng);
+            sgld_apply_core(ht1, g1, eps, scale1, model.lam_h, model.mirror, &mut brng);
+            sgld_apply_core(ht2, g2, eps, scale2, model.lam_h, model.mirror, &mut brng);
         });
 
-        self.exposed = FactorState { w: self.state.w.clone(), ht: self.state.ht1.clone() };
+        // refresh the exposed (W, H1) view in place — no per-step clone
+        self.exposed
+            .w
+            .as_mut_slice()
+            .copy_from_slice(self.state.w.as_slice());
+        self.exposed
+            .ht
+            .as_mut_slice()
+            .copy_from_slice(self.state.ht1.as_slice());
     }
 
     fn state(&self) -> &FactorState {

@@ -10,7 +10,7 @@ use crate::config::RunConfig;
 use crate::data::sparse::Csr;
 use crate::linalg::Mat;
 use crate::model::NmfModel;
-use crate::samplers::{FactorState, Psgld, RunResult, Sampler};
+use crate::samplers::{ExecMode, FactorState, Psgld, RunResult, Sampler};
 use crate::Result;
 
 /// Distributed (block-parallel) stochastic gradient descent.
@@ -37,6 +37,10 @@ impl Dsgd {
 
     pub fn with_threads(self, threads: usize) -> Self {
         Dsgd(self.0.with_threads(threads))
+    }
+
+    pub fn with_exec_mode(self, exec: ExecMode) -> Self {
+        Dsgd(self.0.with_exec_mode(exec))
     }
 
     pub fn with_state(self, state: FactorState) -> Self {

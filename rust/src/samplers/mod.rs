@@ -22,7 +22,7 @@ pub use dsgld::Dsgld;
 pub use gibbs::GibbsPoisson;
 pub use ld::Ld;
 pub use multichain::{run_chains, MultiChainResult};
-pub use psgld::Psgld;
+pub use psgld::{ExecMode, Psgld};
 pub use sgld::Sgld;
 
 use std::time::Instant;

@@ -6,7 +6,7 @@
 use crate::config::RunConfig;
 use crate::metrics::diagnostics::gelman_rubin;
 use crate::samplers::{run_sampler, FactorState, RunResult, Sampler};
-use crate::util::parallel::par_map;
+use crate::util::parallel::WorkerPool;
 
 /// Outcome of a multi-chain run.
 pub struct MultiChainResult {
@@ -46,7 +46,8 @@ where
     M: Fn(&FactorState) -> f64 + Sync,
 {
     let idxs: Vec<usize> = (0..n_chains).collect();
-    let chains = par_map(idxs, threads, |_, c| {
+    let mut pool = WorkerPool::new(threads.max(1).min(n_chains.max(1)));
+    let chains = pool.map(idxs, |_, c| {
         let mut sampler = make_chain(c);
         run_sampler(&mut sampler, run, |s| monitor(s))
     });

@@ -5,22 +5,47 @@
 //!
 //! This is the shared-memory implementation (the paper's CUDA analogue):
 //! the factor matrices are updated in place through disjoint stripe
-//! slices, one OS thread per block (bounded by `threads`). The
-//! distributed implementation (ring of Fig. 4) lives in
-//! [`crate::cluster`]; the batched-HLO implementation in
-//! [`crate::coordinator`].
+//! slices driven by a persistent [`WorkerPool`] — threads are created
+//! once per sampler and parked between iterations, and the steady-state
+//! `step` performs **zero heap allocations** (per-block gradient buffers
+//! and per-worker kernel scratch are all reused). The distributed
+//! implementation (ring of Fig. 4) lives in [`crate::cluster`]; the
+//! batched-HLO implementation in [`crate::coordinator`].
+//!
+//! Determinism contract: every per-block RNG stream is derived from
+//! `(seed, t, block)` — never from the worker slot — so the chain is
+//! bitwise identical across thread counts and [`ExecMode`]s.
 
 use crate::config::RunConfig;
 use crate::data::sparse::{BlockedSparse, Csr};
-use crate::kernels::{grads_dense_core, grads_sparse_core, sgd_apply_core, sgld_apply_core};
+use crate::kernels::{grads_dense_tiled, grads_sparse_core, sgd_apply_core, sgld_apply_core};
 use crate::linalg::Mat;
 use crate::metrics;
 use crate::model::NmfModel;
-use crate::partition::{GridPartition, PartScheduler};
+use crate::partition::{GridPartition, Part, PartScheduler};
 use crate::rng::Rng;
 use crate::samplers::{run_sampler, FactorState, RunResult, Sampler};
-use crate::util::parallel::{default_threads, par_for_each_mut};
+use crate::util::parallel::{
+    default_threads, par_for_each_mut, ScratchArena, SendPtr, WorkerPool,
+};
 use crate::Result;
+
+/// How [`Psgld::step`] executes the B disjoint block updates of a part.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Persistent worker pool (default): threads created once, parked
+    /// between steps, per-worker scratch arenas — zero steady-state
+    /// allocation.
+    #[default]
+    Pool,
+    /// Spawn-per-step baseline (the pre-pool regime): fresh OS threads
+    /// and fresh kernel scratch every step. Numerically identical to
+    /// `Pool`; kept as the before/after reference for the fig6 bench.
+    Spawn,
+    /// Single-threaded execution on the caller thread (no
+    /// synchronisation at all; the determinism reference).
+    Inline,
+}
 
 /// The observed data, pre-decomposed into grid blocks.
 enum DataBlocks {
@@ -43,8 +68,14 @@ pub struct Psgld {
     /// When false, skip the Langevin noise — this turns PSGLD into the
     /// DSGD optimisation baseline (used by [`super::Dsgd`]).
     pub langevin: bool,
-    /// Per-block gradient scratch, reused across iterations.
+    /// Per-block gradient accumulators, reused across iterations.
     scratch: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Persistent workers (with per-worker kernel scratch arenas).
+    pool: WorkerPool,
+    /// Execution strategy for the per-part block fan-out.
+    exec: ExecMode,
+    /// Reusable part buffer (overwritten in place each step).
+    part: Part,
     /// Sparse V kept for monitors.
     sparse_v: Option<Csr>,
 }
@@ -109,6 +140,7 @@ impl Psgld {
                 )
             })
             .collect();
+        let threads = default_threads().min(b);
         Psgld {
             model: model.clone(),
             scheduler: PartScheduler::new(run.schedule, b),
@@ -117,17 +149,30 @@ impl Psgld {
             data,
             state,
             seed,
-            threads: default_threads().min(b),
+            threads,
             langevin: true,
             scratch,
+            pool: WorkerPool::new(threads),
+            exec: ExecMode::Pool,
+            part: Part::identity(b),
             sparse_v,
         }
     }
 
     /// Override the worker-thread bound (defaults to
-    /// `min(B, available_parallelism)`).
+    /// `min(B, default_threads())`). Rebuilds the persistent pool at the
+    /// new width.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self.pool = WorkerPool::new(self.threads.min(self.grid.b()));
+        self
+    }
+
+    /// Select how the per-part block fan-out executes (pool by default;
+    /// `Spawn` reproduces the pre-pool thread-per-step regime, `Inline`
+    /// runs single-threaded). All modes are bitwise identical.
+    pub fn with_exec_mode(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -178,37 +223,6 @@ impl Psgld {
         }
     }
 
-    /// Split a row-major matrix buffer into per-stripe mutable slices
-    /// (stripes are whole-row ranges, so slices are contiguous).
-    fn stripe_slices<'a>(
-        data: &'a mut [f32],
-        bounds: impl Iterator<Item = usize>,
-        k: usize,
-    ) -> Vec<&'a mut [f32]> {
-        let mut out = Vec::new();
-        let mut rest = data;
-        let mut prev = 0usize;
-        for bound in bounds {
-            let (head, tail) = rest.split_at_mut((bound - prev) * k);
-            out.push(head);
-            rest = tail;
-            prev = bound;
-        }
-        out
-    }
-}
-
-/// Per-block work item handed to the worker threads.
-struct BlockTask<'a> {
-    w: &'a mut [f32],
-    m: usize,
-    ht: &'a mut [f32],
-    n: usize,
-    gw: &'a mut [f32],
-    ght: &'a mut [f32],
-    dense: Option<&'a Mat>,
-    sparse: Option<&'a crate::data::sparse::BlockEntries>,
-    rng: Rng,
 }
 
 impl Sampler for Psgld {
@@ -216,83 +230,90 @@ impl Sampler for Psgld {
         let b = self.grid.b();
         let k = self.model.k;
         let mut rng = Rng::derive(self.seed, &[t, 0xcafe]);
-        let part = self.scheduler.next_part(&mut rng);
+        self.scheduler.next_part_into(&mut rng, &mut self.part);
         let eps = self.run_cfg.step.eps(t) as f32;
         let scale = match &self.data {
-            DataBlocks::Dense(_) => self.grid.scale_dense(&part),
-            DataBlocks::Sparse(bs) => bs.scale(&part),
+            DataBlocks::Dense(_) => self.grid.scale_dense(&self.part),
+            DataBlocks::Sparse(bs) => bs.scale(&self.part),
         };
 
-        // Row-stripe slices of W and column-stripe slices of Ht.
-        let row_bounds: Vec<usize> = (0..b).map(|bi| self.grid.row_range(bi).end).collect();
-        let col_bounds: Vec<usize> = (0..b).map(|bj| self.grid.col_range(bj).end).collect();
-        let w_stripes = Self::stripe_slices(self.state.w.as_mut_slice(), row_bounds.into_iter(), k);
-        let ht_stripes =
-            Self::stripe_slices(self.state.ht.as_mut_slice(), col_bounds.into_iter(), k);
+        // Base pointers for the in-place stripe updates. The closure
+        // below re-derives each block's W row-stripe and Ht col-stripe
+        // from these; no per-step slice or task vectors are built.
+        let w_ptr = SendPtr::new(self.state.w.as_mut_slice().as_mut_ptr());
+        let ht_ptr = SendPtr::new(self.state.ht.as_mut_slice().as_mut_ptr());
+        let scratch_ptr = SendPtr::new(self.scratch.as_mut_ptr());
 
-        // Reorder Ht stripes by the part permutation (block b pairs row
-        // stripe b with column stripe perm[b]).
-        let mut ht_slots: Vec<Option<&mut [f32]>> = ht_stripes.into_iter().map(Some).collect();
-
-        let mut tasks: Vec<BlockTask> = Vec::with_capacity(b);
-        for (bi, (w_slice, scratch_b)) in
-            w_stripes.into_iter().zip(self.scratch.iter_mut()).enumerate()
-        {
-            let bj = part.perm[bi];
-            let ht_slice = ht_slots[bj].take().expect("perm is a bijection");
-            let m = self.grid.row_range(bi).len();
-            let n = self.grid.col_range(bj).len();
-            let (gw_buf, ght_buf) = scratch_b;
-            gw_buf[..m * k].fill(0.0);
-            ght_buf[..n * k].fill(0.0);
-            let (gw, ght) = (&mut gw_buf[..m * k], &mut ght_buf[..n * k]);
-            let (dense, sparse) = match &self.data {
-                DataBlocks::Dense(blocks) => (Some(&blocks[bi * b + bj]), None),
-                DataBlocks::Sparse(bs) => (None, Some(bs.block(bi, bj))),
-            };
-            tasks.push(BlockTask {
-                w: w_slice,
-                m,
-                ht: ht_slice,
-                n,
-                gw,
-                ght,
-                dense,
-                sparse,
-                rng: Rng::derive(self.seed, &[t, bi as u64]),
-            });
-        }
-
+        let grid = &self.grid;
+        let data = &self.data;
         let model = &self.model;
+        let part = &self.part;
+        let seed = self.seed;
         let langevin = self.langevin;
-        par_for_each_mut(&mut tasks, self.threads, |_, task| {
-            let ll_unused = match (task.dense, task.sparse) {
-                (Some(vblk), None) => grads_dense_core(
-                    task.w, task.m, task.ht, task.n, k,
-                    vblk.as_slice(), model.beta, model.phi,
-                    task.gw, task.ght,
-                ),
-                (None, Some(blk)) => grads_sparse_core(
-                    task.w, task.ht, k, blk, model.beta, model.phi,
-                    task.gw, task.ght,
-                ),
-                _ => unreachable!(),
+
+        let body = move |arena: &mut ScratchArena, bi: usize| {
+            let bj = part.perm[bi];
+            let rows = grid.row_range(bi);
+            let cols = grid.col_range(bj);
+            let (m, n) = (rows.len(), cols.len());
+            // SAFETY: row stripes are disjoint across bi; column stripes
+            // are disjoint across bj = perm[bi] because perm is a
+            // bijection; scratch[bi] is touched by exactly one task.
+            // Stripes are whole-row (resp. whole-col) ranges of the
+            // row-major buffers, hence contiguous.
+            let w = unsafe {
+                std::slice::from_raw_parts_mut(w_ptr.get().add(rows.start * k), m * k)
             };
-            let _ = ll_unused;
-            if langevin {
-                sgld_apply_core(
-                    task.w, task.gw, eps, scale, model.lam_w, model.mirror,
-                    &mut task.rng,
-                );
-                sgld_apply_core(
-                    task.ht, task.ght, eps, scale, model.lam_h, model.mirror,
-                    &mut task.rng,
-                );
-            } else {
-                sgd_apply_core(task.w, task.gw, eps, scale, model.lam_w, model.mirror);
-                sgd_apply_core(task.ht, task.ght, eps, scale, model.lam_h, model.mirror);
+            let ht = unsafe {
+                std::slice::from_raw_parts_mut(ht_ptr.get().add(cols.start * k), n * k)
+            };
+            let sb = unsafe { &mut *scratch_ptr.get().add(bi) };
+            let gw = &mut sb.0[..m * k];
+            let ght = &mut sb.1[..n * k];
+            gw.fill(0.0);
+            ght.fill(0.0);
+            match data {
+                DataBlocks::Dense(blocks) => {
+                    let _ = grads_dense_tiled(
+                        w, m, ht, n, k,
+                        blocks[bi * b + bj].as_slice(),
+                        model.beta, model.phi, model.mirror,
+                        gw, ght, arena,
+                    );
+                }
+                DataBlocks::Sparse(bs) => {
+                    let _ = grads_sparse_core(
+                        w, ht, k, bs.block(bi, bj),
+                        model.beta, model.phi, model.mirror,
+                        gw, ght,
+                    );
+                }
             }
-        });
+            // Per-block stream keyed by (seed, t, bi) — independent of
+            // which worker slot runs the block.
+            let mut brng = Rng::derive(seed, &[t, bi as u64]);
+            if langevin {
+                sgld_apply_core(w, gw, eps, scale, model.lam_w, model.mirror, &mut brng);
+                sgld_apply_core(ht, ght, eps, scale, model.lam_h, model.mirror, &mut brng);
+            } else {
+                sgd_apply_core(w, gw, eps, scale, model.lam_w, model.mirror);
+                sgd_apply_core(ht, ght, eps, scale, model.lam_h, model.mirror);
+            }
+        };
+
+        match self.exec {
+            ExecMode::Pool => self.pool.for_each_index(b, body),
+            ExecMode::Inline => self.pool.for_each_index_inline(b, body),
+            ExecMode::Spawn => {
+                // Pre-pool regime: per-step index vector, per-task
+                // kernel scratch, fresh OS threads via par_for_each_mut.
+                let mut idxs: Vec<usize> = (0..b).collect();
+                par_for_each_mut(&mut idxs, self.threads, |_, bi| {
+                    let mut arena = ScratchArena::new();
+                    body(&mut arena, *bi);
+                });
+            }
+        }
     }
 
     fn state(&self) -> &FactorState {
@@ -344,9 +365,74 @@ mod tests {
         // the chain is bitwise identical regardless of thread count
         let (_, last1, s1) = quick_run(4, 1, 17);
         let (_, last4, s4) = quick_run(4, 4, 17);
+        let (_, lastd, sd) = quick_run(4, default_threads(), 17);
         assert_eq!(last1, last4);
         assert_eq!(s1.w, s4.w);
         assert_eq!(s1.ht, s4.ht);
+        assert_eq!(last1, lastd);
+        assert_eq!(s1.w, sd.w);
+        assert_eq!(s1.ht, sd.ht);
+    }
+
+    fn quick_run_sparse(threads: usize, exec: ExecMode, seed: u64) -> FactorState {
+        use crate::data::movielens;
+        let csr = movielens::movielens_like_dims(40, 50, 600, 4, 9);
+        let model = NmfModel::poisson(4).with_priors(2.0, 2.0);
+        let run = RunConfig::quick(60)
+            .with_step(StepSchedule::Polynomial { a: 0.01, b: 0.51 });
+        let mut s = Psgld::new_sparse(&csr, &model, 4, run, seed)
+            .unwrap()
+            .with_threads(threads)
+            .with_exec_mode(exec);
+        for t in 1..=60 {
+            s.step(t);
+        }
+        s.state().clone()
+    }
+
+    #[test]
+    fn sparse_thread_count_does_not_change_the_chain() {
+        // same contract on the sparse path: 1, 2 and default_threads()
+        // workers produce a bitwise-identical FactorState
+        let s1 = quick_run_sparse(1, ExecMode::Pool, 23);
+        let s2 = quick_run_sparse(2, ExecMode::Pool, 23);
+        let sd = quick_run_sparse(default_threads(), ExecMode::Pool, 23);
+        assert_eq!(s1.w, s2.w);
+        assert_eq!(s1.ht, s2.ht);
+        assert_eq!(s1.w, sd.w);
+        assert_eq!(s1.ht, sd.ht);
+    }
+
+    #[test]
+    fn exec_modes_are_bitwise_identical() {
+        // pool vs inline vs the spawn-per-step baseline: the chain must
+        // not depend on how the block fan-out is executed
+        let pool = quick_run_sparse(4, ExecMode::Pool, 29);
+        let inline = quick_run_sparse(4, ExecMode::Inline, 29);
+        let spawn = quick_run_sparse(4, ExecMode::Spawn, 29);
+        assert_eq!(pool.w, inline.w);
+        assert_eq!(pool.ht, inline.ht);
+        assert_eq!(pool.w, spawn.w);
+        assert_eq!(pool.ht, spawn.ht);
+
+        // dense path too
+        let model = NmfModel::poisson(3);
+        let data = synth::poisson_nmf(24, 24, &model, 31);
+        let run = RunConfig::quick(40);
+        let mut states = Vec::new();
+        for exec in [ExecMode::Pool, ExecMode::Inline, ExecMode::Spawn] {
+            let mut s = Psgld::new(&data.v, &model, 3, run.clone(), 7)
+                .with_threads(3)
+                .with_exec_mode(exec);
+            for t in 1..=40 {
+                s.step(t);
+            }
+            states.push(s.state().clone());
+        }
+        assert_eq!(states[0].w, states[1].w);
+        assert_eq!(states[0].ht, states[1].ht);
+        assert_eq!(states[0].w, states[2].w);
+        assert_eq!(states[0].ht, states[2].ht);
     }
 
     #[test]

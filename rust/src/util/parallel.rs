@@ -1,20 +1,346 @@
-//! Scoped-thread data parallelism (rayon is unavailable offline).
+//! Data parallelism for the block samplers (rayon is unavailable
+//! offline).
 //!
-//! `par_map_mut` is what the shared-memory PSGLD driver needs: apply a
-//! closure to B disjoint `&mut` work items (the blocks of a part) across
-//! a bounded number of OS threads. Items are distributed round-robin;
-//! with B ≤ threads each item gets its own thread, matching the paper's
-//! one-thread-per-block GPU/OpenMP structure.
+//! Two regimes live here:
+//!
+//! * [`WorkerPool`] — a **persistent** pool: threads are created once
+//!   (per sampler), park on a condvar between iterations and are woken
+//!   through an epoch barrier. Work is handed over as disjoint indexed
+//!   tasks (the caller guarantees index-disjoint mutation, exactly the
+//!   stripe-slice safety story of the PSGLD driver), so the steady-state
+//!   `step()` costs two condvar transitions instead of B thread
+//!   spawn/joins. Each worker slot owns a [`ScratchArena`] that the
+//!   kernels reuse across iterations — the allocation-free hot path.
+//! * [`par_for_each_mut`] / [`par_map`] — the original spawn-per-call
+//!   scoped-thread versions, kept as the baseline the benches compare
+//!   against (`ExecMode::Spawn`) and for one-shot callers.
+//!
+//! Determinism contract: a task's result may depend only on its index,
+//! never on which worker slot ran it. Arena contents are garbage between
+//! tasks (kernels must fully overwrite before reading), which makes the
+//! chain bitwise identical across 1/2/N workers and pool-vs-inline.
 
-/// Number of worker threads to use by default (the machine's
-/// parallelism, capped so tests stay snappy).
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Hard ceiling on the default worker count ("so tests stay snappy" —
+/// and because B rarely exceeds this on one host). Raise per-run with
+/// the `PALLAS_THREADS` environment variable or `with_threads`.
+pub const DEFAULT_THREAD_CAP: usize = 16;
+
+/// Number of worker threads to use by default: `PALLAS_THREADS` if set
+/// (uncapped), else the machine's available parallelism capped at
+/// [`DEFAULT_THREAD_CAP`].
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    if let Ok(v) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(DEFAULT_THREAD_CAP)
 }
 
+// ---------------------------------------------------------------------------
+// Scratch arenas
+// ---------------------------------------------------------------------------
+
+/// Grow-only f32 scratch owned by one worker slot. Kernels carve views
+/// out of it per task; it only allocates while growing towards the
+/// high-water mark, after which the steady state is allocation-free.
+#[derive(Default)]
+pub struct ScratchArena {
+    buf: Vec<f32>,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        ScratchArena { buf: Vec::new() }
+    }
+
+    /// Current capacity high-water mark (in f32 elements).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Three disjoint views of `a + b + c` elements. Contents are
+    /// arbitrary (whatever the previous task left); callers must fully
+    /// initialise before reading.
+    pub fn take3(&mut self, a: usize, b: usize, c: usize) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        let need = a + b + c;
+        if self.buf.len() < need {
+            self.buf.resize(need, 0.0);
+        }
+        let (xa, rest) = self.buf.split_at_mut(a);
+        let (xb, rest) = rest.split_at_mut(b);
+        (xa, xb, &mut rest[..c])
+    }
+}
+
+/// Covariant raw-pointer wrapper that asserts cross-thread safety. Used
+/// by the samplers to hand base pointers of the factor matrices into
+/// pool tasks; the tasks derive disjoint stripes from them (disjointness
+/// follows from the part permutation being a bijection).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Type-erased job: a borrowed `Fn(worker_slot)` whose lifetime is
+/// erased to 'static. Sound because the submitting thread blocks inside
+/// [`WorkerPool::run`] until every worker has finished with it.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+}
+
+unsafe impl Send for Job {}
+
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> Job {
+    let raw: *const (dyn Fn(usize) + Sync + 'a) = f;
+    // SAFETY: pure lifetime erasure on a fat raw pointer; the pointee is
+    // only dereferenced while `run` (which holds the real borrow) blocks.
+    Job { f: unsafe { std::mem::transmute::<*const (dyn Fn(usize) + Sync + 'a), *const (dyn Fn(usize) + Sync + 'static)>(raw) } }
+}
+
+struct JobState {
+    /// Bumped once per published job; workers run each epoch once.
+    epoch: u64,
+    /// Helper threads still running the current epoch's job.
+    remaining: usize,
+    /// A helper panicked during the current epoch.
+    panicked: bool,
+    shutdown: bool,
+    job: Option<Job>,
+}
+
+/// One worker slot's arena, accessed by exactly one thread per epoch.
+struct SyncCell<T>(UnsafeCell<T>);
+
+// SAFETY: access discipline is one-thread-per-slot-per-epoch, enforced
+// by the epoch barrier (helpers) and `&mut self` methods (caller).
+unsafe impl<T: Send> Sync for SyncCell<T> {}
+
+struct PoolShared {
+    state: Mutex<JobState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    scratch: Vec<SyncCell<ScratchArena>>,
+}
+
+fn lock(m: &Mutex<JobState>) -> MutexGuard<'_, JobState> {
+    // a worker panic poisons the mutex; the flag-based protocol below
+    // stays consistent regardless, so poisoning carries no information
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Persistent worker pool with an epoch barrier. `width` counts the
+/// calling thread: a pool of width `n` owns `n - 1` parked helper
+/// threads and the caller executes slot 0's share in [`run`]. Width 1
+/// degenerates to inline execution with zero synchronisation.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    width: usize,
+}
+
+impl WorkerPool {
+    /// Create a pool of total width `threads` (`threads - 1` parked
+    /// helpers + the caller).
+    pub fn new(threads: usize) -> Self {
+        let width = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(JobState {
+                epoch: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+                job: None,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            scratch: (0..width).map(|_| SyncCell(UnsafeCell::new(ScratchArena::new()))).collect(),
+        });
+        let handles = (1..width)
+            .map(|slot| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pallas-worker-{slot}"))
+                    .spawn(move || worker_loop(shared, slot))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, width }
+    }
+
+    /// Total worker count, including the calling thread.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Run `f(arena, i)` for every `i in 0..n`, distributed round-robin
+    /// over the pool (`i % width == slot`). Blocks until all indices
+    /// completed. `&mut self` serialises submissions, which is what
+    /// makes the one-thread-per-slot arena discipline sound.
+    pub fn for_each_index(&mut self, n: usize, f: impl Fn(&mut ScratchArena, usize) + Sync) {
+        if n == 0 {
+            return;
+        }
+        if self.width == 1 || n == 1 {
+            self.for_each_index_inline(n, f);
+            return;
+        }
+        let width = self.width;
+        let shared: &PoolShared = &self.shared;
+        let job = move |slot: usize| {
+            // SAFETY: slot is driven by exactly one thread this epoch
+            let arena = unsafe { &mut *shared.scratch[slot].0.get() };
+            let mut i = slot;
+            while i < n {
+                f(arena, i);
+                i += width;
+            }
+        };
+        self.run(&job);
+    }
+
+    /// Sequential variant on the calling thread (slot 0's arena), used
+    /// for `ExecMode::Inline` and the width-1 fast path. Numerically
+    /// identical to the parallel path by the determinism contract.
+    pub fn for_each_index_inline(&mut self, n: usize, f: impl Fn(&mut ScratchArena, usize)) {
+        let arena = unsafe { &mut *self.shared.scratch[0].0.get() };
+        for i in 0..n {
+            f(arena, i);
+        }
+    }
+
+    /// Parallel map over owned items, preserving input order.
+    pub fn map<T: Send, R: Send>(
+        &mut self,
+        items: Vec<T>,
+        f: impl Fn(usize, T) -> R + Sync,
+    ) -> Vec<R> {
+        let mut slots: Vec<(Option<T>, Option<R>)> =
+            items.into_iter().map(|t| (Some(t), None)).collect();
+        let n = slots.len();
+        let base = SendPtr::new(slots.as_mut_ptr());
+        self.for_each_index(n, |_arena, i| {
+            // SAFETY: each index is visited exactly once; slots are
+            // disjoint by index
+            let slot = unsafe { &mut *base.get().add(i) };
+            let t = slot.0.take().expect("item present");
+            slot.1 = Some(f(i, t));
+        });
+        slots.into_iter().map(|s| s.1.expect("result present")).collect()
+    }
+
+    /// Publish a job, run slot 0's share on the caller, block until the
+    /// helpers drain, then propagate any panic. Private and only reached
+    /// through `&mut self` entry points, so submissions are serialised.
+    fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(self.width > 1);
+        {
+            let mut st = lock(&self.shared.state);
+            debug_assert_eq!(st.remaining, 0, "previous epoch drained");
+            st.job = Some(erase(job));
+            st.remaining = self.width - 1;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.shared.work_cv.notify_all();
+        }
+        // the caller is worker slot 0; catch so a caller-side panic
+        // still waits for the helpers (they borrow `job`)
+        let caller = catch_unwind(AssertUnwindSafe(|| job(0)));
+        let worker_panicked = {
+            let mut st = lock(&self.shared.state);
+            while st.remaining > 0 {
+                st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+            std::mem::replace(&mut st.panicked, false)
+        };
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("worker pool: a worker thread panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, slot: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("job published with epoch bump");
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // SAFETY: `run` keeps the pointee alive until `remaining == 0`
+        let f = unsafe { &*job.f };
+        let outcome = catch_unwind(AssertUnwindSafe(|| f(slot)));
+        let mut st = lock(&shared.state);
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spawn-per-call baseline (legacy)
+// ---------------------------------------------------------------------------
+
 /// Apply `f` to every element of `items` in parallel using at most
-/// `threads` OS threads. Preserves ordering semantics trivially since
-/// each element is processed exactly once via `&mut`.
+/// `threads` **freshly spawned** scoped threads. This is the
+/// spawn-per-call regime the persistent pool replaces on the hot path;
+/// kept as the measured baseline (`ExecMode::Spawn`, fig6 bench) and for
+/// one-shot callers.
 pub fn par_for_each_mut<T: Send>(
     items: &mut [T],
     threads: usize,
@@ -44,7 +370,7 @@ pub fn par_for_each_mut<T: Send>(
     });
 }
 
-/// Parallel map producing a `Vec<R>` in input order.
+/// Parallel map producing a `Vec<R>` in input order (spawn-per-call).
 pub fn par_map<T: Send, R: Send>(
     items: Vec<T>,
     threads: usize,
@@ -112,5 +438,113 @@ mod tests {
         let mut one = vec![5u8];
         par_for_each_mut(&mut one, 0, |_, x| *x += 1);
         assert_eq!(one[0], 6);
+    }
+
+    // ---- persistent pool -------------------------------------------------
+
+    #[test]
+    fn pool_runs_every_index_exactly_once() {
+        let mut pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_each_index(37, |_, i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        // pool is reusable across epochs
+        pool.for_each_index(37, |_, i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 2));
+    }
+
+    #[test]
+    fn pool_map_preserves_order_and_is_reusable() {
+        let mut pool = WorkerPool::new(3);
+        for round in 0..3usize {
+            let out = pool.map((0..23).collect::<Vec<usize>>(), |i, x| {
+                assert_eq!(i, x);
+                x * 2 + round
+            });
+            assert_eq!(out, (0..23).map(|x| x * 2 + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn pool_width_one_and_empty_are_inline() {
+        let mut pool = WorkerPool::new(1);
+        assert_eq!(pool.width(), 1);
+        let mut seen = Vec::new();
+        let base = SendPtr::new(&mut seen as *mut Vec<usize>);
+        pool.for_each_index(5, |_, i| unsafe { (*base.get()).push(i) });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]); // in order: inline path
+        pool.for_each_index(0, |_, _| unreachable!());
+    }
+
+    #[test]
+    fn pool_matches_inline_execution() {
+        // determinism contract: same results regardless of worker count
+        let compute = |i: usize| (i as f64 * 0.37).sin();
+        let run = |width: usize| -> Vec<f64> {
+            let mut pool = WorkerPool::new(width);
+            let mut out = vec![0.0f64; 41];
+            let base = SendPtr::new(out.as_mut_ptr());
+            pool.for_each_index(41, |_, i| unsafe {
+                *base.get().add(i) = compute(i);
+            });
+            out
+        };
+        let a = run(1);
+        let b = run(2);
+        let c = run(5);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let mut pool = WorkerPool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.for_each_index(8, |_, i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // the pool stays usable after a panic
+        let counter = AtomicUsize::new(0);
+        pool.for_each_index(8, |_, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn scratch_arena_grows_and_reuses() {
+        let mut arena = ScratchArena::new();
+        {
+            let (a, b, c) = arena.take3(3, 4, 5);
+            assert_eq!((a.len(), b.len(), c.len()), (3, 4, 5));
+            a.fill(1.0);
+            b.fill(2.0);
+            c.fill(3.0);
+        }
+        assert_eq!(arena.len(), 12);
+        // smaller request reuses the same buffer (no shrink)
+        let (a, _, _) = arena.take3(2, 2, 2);
+        assert_eq!(a, &[1.0, 1.0]); // old contents visible: views are raw
+        assert_eq!(arena.len(), 12);
+    }
+
+    #[test]
+    fn default_threads_cap_and_env_override() {
+        std::env::set_var("PALLAS_THREADS", "3");
+        assert_eq!(default_threads(), 3);
+        std::env::set_var("PALLAS_THREADS", "not-a-number");
+        let fallback = default_threads();
+        assert!(fallback >= 1 && fallback <= DEFAULT_THREAD_CAP);
+        std::env::remove_var("PALLAS_THREADS");
+        let n = default_threads();
+        assert!(n >= 1 && n <= DEFAULT_THREAD_CAP);
     }
 }

@@ -1,0 +1,100 @@
+//! Steady-state allocation accounting for the PSGLD hot path.
+//!
+//! The persistent worker pool + scratch-arena design promises that once
+//! a sampler is warmed up (pool spawned, arenas grown to their final
+//! size, one full cyclic part sweep done), `Psgld::step` performs ZERO
+//! heap allocations — on the caller thread and on every worker thread.
+//! This test pins that property with a counting global allocator.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::data::synth;
+use psgld::model::NmfModel;
+use psgld::samplers::{Psgld, Sampler};
+
+/// Counts every allocation (alloc, zeroed alloc, realloc) process-wide.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+const B: usize = 4;
+
+fn assert_steady_state_alloc_free(mut sampler: Psgld, label: &str) {
+    // Warmup: pool threads spawn lazily-initialised statics, arenas grow
+    // to their high-water mark, and a full cyclic part sweep touches
+    // every (block, stripe) size combination.
+    let warmup = (4 * B) as u64;
+    for t in 1..=warmup {
+        sampler.step(t);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let steps = 32u64;
+    for t in warmup + 1..=warmup + steps {
+        sampler.step(t);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{label}: {} heap allocations in {steps} steady-state steps",
+        after - before
+    );
+    // sanity: the chain actually moved
+    assert!(sampler.state().w.as_slice().iter().all(|x| x.is_finite()));
+}
+
+fn run_cfg() -> RunConfig {
+    RunConfig::quick(1_000).with_step(StepSchedule::Polynomial { a: 0.005, b: 0.51 })
+}
+
+// One #[test] covering all scenarios: the allocation counter is
+// process-wide, so scenarios must run sequentially in a binary with no
+// other concurrently-running tests.
+#[test]
+fn psgld_step_is_allocation_free_in_steady_state() {
+    // dense path, 1 and 2 workers
+    for threads in [1usize, 2] {
+        let model = NmfModel::poisson(8);
+        let data = synth::poisson_nmf(64, 64, &model, 3 + threads as u64);
+        let s = Psgld::new(&data.v, &model, B, run_cfg(), threads as u64)
+            .with_threads(threads);
+        assert_steady_state_alloc_free(s, &format!("dense/threads={threads}"));
+    }
+
+    // sparse path, 1 and 2 workers
+    use psgld::data::movielens;
+    let csr = movielens::movielens_like_dims(48, 64, 800, 4, 5);
+    let model = NmfModel::poisson(4).with_priors(2.0, 2.0);
+    for threads in [1usize, 2] {
+        let s = Psgld::new_sparse(&csr, &model, B, run_cfg(), 6)
+            .unwrap()
+            .with_threads(threads);
+        assert_steady_state_alloc_free(s, &format!("sparse/threads={threads}"));
+    }
+}
