@@ -3,17 +3,28 @@
 //! runtime parity; the delta measured here is exactly the Langevin
 //! noise generation, broken out separately.
 //!
+//! Also carries the §Perf before/after microbench for the sparse
+//! block-gradient kernel: the pre-PR local-index COO scalar walk vs.
+//! the block-local CSR kernel at the scalar and SIMD-dispatched tiers.
+//! Writes `BENCH_fig5.json` at the repo root.
+//!
 //! Run: `cargo bench --bench fig5_movielens`
 
 mod bench_util;
-use bench_util::{header, report, time_it};
+use bench_util::{header, report, time_it, JsonSink};
 
 use psgld::config::{RunConfig, StepSchedule};
 use psgld::data::movielens;
-use psgld::kernels::sgld_apply_core;
+use psgld::data::sparse::BlockedSparse;
+use psgld::kernels::{
+    active_tier, grads_sparse_coo_ref, grads_sparse_core, set_tier_override, sgld_apply_core,
+    SimdTier,
+};
+use psgld::linalg::Mat;
 use psgld::model::NmfModel;
 use psgld::rng::Rng;
 use psgld::samplers::{Dsgd, Psgld, Sampler};
+use psgld::util::parallel::ScratchArena;
 
 fn main() {
     header("Fig 5: sparse PSGLD vs DSGD per-iteration cost (K=50, B=15)");
@@ -25,6 +36,7 @@ fn main() {
         csr.cols(),
         csr.nnz()
     );
+    let mut json = JsonSink::at_repo_root("BENCH_fig5.json");
     let lam = (k as f64 / csr.mean()).sqrt() as f32;
     let model = NmfModel::poisson(k).with_priors(lam, lam);
     let run = RunConfig::quick(100)
@@ -38,6 +50,7 @@ fn main() {
         p.step(t);
     });
     report("psgld (grads + noise + mirror)", s_p, Some((grads_per_iter, "grad-entries")));
+    json.push("fig5/psgld_step", s_p, Some((grads_per_iter, "grad-entries")), 2);
 
     let mut d = Dsgd::new_sparse(&csr, &model, 15, run.clone(), 2).unwrap();
     let mut t = 0u64;
@@ -46,16 +59,19 @@ fn main() {
         d.step(t);
     });
     report("dsgd (grads + mirror, no noise)", s_d, Some((grads_per_iter, "grad-entries")));
+    json.push("fig5/dsgd_step", s_d, Some((grads_per_iter, "grad-entries")), 2);
 
     // isolate the noise cost: the only difference between the two
     let noise_entries = ((csr.rows() + csr.cols()) * k) as f64;
     let mut buf = vec![0.1f32; (csr.rows() + csr.cols()) * k];
     let zeros = vec![0f32; buf.len()];
     let mut rng = Rng::seed_from(3);
+    let mut noise_scratch = ScratchArena::new();
     let s_n = time_it(3, 15, || {
-        sgld_apply_core(&mut buf, &zeros, 0.01, 1.0, 0.0, true, &mut rng);
+        sgld_apply_core(&mut buf, &zeros, 0.01, 1.0, 0.0, true, &mut rng, &mut noise_scratch);
     });
     report("langevin noise alone ((I+J)K draws)", s_n, Some((noise_entries, "draws")));
+    json.push("fig5/langevin_noise", s_n, Some((noise_entries, "draws")), 1);
 
     println!();
     println!(
@@ -67,4 +83,72 @@ fn main() {
         "(at the paper's full ML-10M scale the grad work grows 150x while the\n\
          noise only grows 12x, so the ratio approaches the paper's parity)"
     );
+
+    // --- sparse block-gradient microbench: pre-PR COO scalar walk vs.
+    // block-local CSR at the scalar and SIMD tiers (single-threaded).
+    header("sparse block gradients: COO scalar (before) vs CSR+SIMD (after)");
+    let bs = BlockedSparse::from_csr(&csr, 15).unwrap();
+    let blk = bs.block(0, 0);
+    let m = bs.grid().row_range(0).len();
+    let n = bs.grid().col_range(0).len();
+    let w = Mat::uniform(m, k, 0.1, 1.0, &mut rng);
+    let ht = Mat::uniform(n, k, 0.1, 1.0, &mut rng);
+    let mut gw = vec![0f32; m * k];
+    let mut ght = vec![0f32; n * k];
+    let nnz = blk.nnz() as f64;
+    println!("block (0,0): {}x{} rows/cols, {} nnz, K={}", m, n, blk.nnz(), k);
+
+    // the pre-PR layout: one (row, col, val) triple per entry
+    let (mut rows, mut cols, mut vals) = (Vec::new(), Vec::new(), Vec::new());
+    for (r, c, v) in blk.iter_coo() {
+        rows.push(r);
+        cols.push(c);
+        vals.push(v);
+    }
+
+    let s_coo = time_it(3, 30, || {
+        gw.fill(0.0);
+        ght.fill(0.0);
+        grads_sparse_coo_ref(
+            w.as_slice(), ht.as_slice(), k, &rows, &cols, &vals, 1.0, 1.0, true,
+            &mut gw, &mut ght,
+        );
+    });
+    report("sparse_grads/before-coo-scalar", s_coo, Some((nnz, "nnz")));
+    json.push("sparse_grads/before-coo-scalar", s_coo, Some((nnz, "nnz")), 1);
+
+    set_tier_override(Some(SimdTier::Scalar));
+    let s_csr_scalar = time_it(3, 30, || {
+        gw.fill(0.0);
+        ght.fill(0.0);
+        grads_sparse_core(
+            w.as_slice(), ht.as_slice(), k, blk, 1.0, 1.0, true, &mut gw, &mut ght,
+        );
+    });
+    report("sparse_grads/after-csr-scalar", s_csr_scalar, Some((nnz, "nnz")));
+    json.push("sparse_grads/after-csr-scalar", s_csr_scalar, Some((nnz, "nnz")), 1);
+
+    set_tier_override(None);
+    let tier = active_tier();
+    let s_csr_simd = time_it(3, 30, || {
+        gw.fill(0.0);
+        ght.fill(0.0);
+        grads_sparse_core(
+            w.as_slice(), ht.as_slice(), k, blk, 1.0, 1.0, true, &mut gw, &mut ght,
+        );
+    });
+    report("sparse_grads/after-csr-simd", s_csr_simd, Some((nnz, "nnz")));
+    json.push("sparse_grads/after-csr-simd", s_csr_simd, Some((nnz, "nnz")), 1);
+
+    let speedup = s_coo / s_csr_simd;
+    println!();
+    println!(
+        "active tier: {tier:?}; CSR layout alone {:.2}x, CSR+SIMD {speedup:.2}x \
+         over the pre-PR scalar COO walk",
+        s_coo / s_csr_scalar
+    );
+    // encoded so ops_per_s == the speedup ratio
+    json.push("sparse_grads/coo_to_csr_simd_speedup", 1.0 / speedup, Some((1.0, "x")), 1);
+
+    json.write();
 }

@@ -118,12 +118,13 @@ fn main() {
     report("sparse_grads/K=50+nonneg-hint", s, Some((blk.nnz() as f64, "nnz")));
     json.push("sparse_grads/K=50+nonneg-hint", s, Some((blk.nnz() as f64, "nnz")), 1);
 
-    header("SGLD apply (drift + Langevin noise + mirror)");
+    header("SGLD apply (drift + batched Langevin noise + mirror)");
+    let mut noise_scratch = ScratchArena::new();
     for &len in &[1usize << 14, 1 << 18, 1 << 21] {
         let g = vec![0.5f32; len];
         let mut x = vec![0.1f32; len];
         let s = time_it(3, 20, || {
-            sgld_apply_core(&mut x, &g, 0.01, 1.0, 1.0, true, &mut rng);
+            sgld_apply_core(&mut x, &g, 0.01, 1.0, 1.0, true, &mut rng, &mut noise_scratch);
         });
         report(&format!("sgld_apply/{len}"), s, Some((len as f64, "entries")));
         json.push(&format!("sgld_apply/{len}"), s, Some((len as f64, "entries")), 1);

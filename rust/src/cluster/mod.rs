@@ -120,9 +120,20 @@ impl ComputeModel {
         let per_entry = tick.elapsed().as_secs_f64() / (reps * m * m) as f64;
 
         let mut buf = vec![0f32; 1 << 16];
+        let zeros = vec![0f32; 1 << 16];
         let tick = Instant::now();
         let mut trng = Rng::seed_from(1);
-        sgld_apply_core(&mut buf, &vec![0f32; 1 << 16], 0.01, 1.0, 0.0, true, &mut trng);
+        let mut noise_scratch = crate::util::parallel::ScratchArena::new();
+        sgld_apply_core(
+            &mut buf,
+            &zeros,
+            0.01,
+            1.0,
+            0.0,
+            true,
+            &mut trng,
+            &mut noise_scratch,
+        );
         let per_noise = tick.elapsed().as_secs_f64() / (1 << 16) as f64;
         ComputeModel {
             entry_rate: 1.0 / per_entry.max(1e-12),
@@ -217,11 +228,19 @@ pub fn psgld_distributed_full(
                 .max(compute.block_time_s(blocked.block(bi, bj).nnz(), (m + n) * k));
         }
         {
+            // once-per-part nonneg decision, computed exactly as the
+            // shared-memory Psgld does it (bitwise-equality contract)
+            let nonneg = crate::kernels::nonneg_hint(
+                model.mirror,
+                state.w.as_slice(),
+                state.ht.as_slice(),
+                blocked.nnz(),
+            );
             let w_ptr = SendPtr::new(state.w.as_mut_slice().as_mut_ptr());
             let ht_ptr = SendPtr::new(state.ht.as_mut_slice().as_mut_ptr());
             let scratch_ptr = SendPtr::new(scratch.as_mut_ptr());
             let (grid, blocked, part) = (&grid, &blocked, &part);
-            pool.for_each_index(b, move |_arena, bi| {
+            pool.for_each_index(b, move |arena, bi| {
                 let bj = part.perm[bi];
                 let rows = grid.row_range(bi);
                 let cols = grid.col_range(bj);
@@ -242,11 +261,15 @@ pub fn psgld_distributed_full(
                 ght.fill(0.0);
                 grads_sparse_core(
                     w_slice, ht_slice, k, blocked.block(bi, bj),
-                    model.beta, model.phi, model.mirror, gw, ght,
+                    model.beta, model.phi, nonneg, gw, ght,
                 );
                 let mut brng = Rng::derive(seed, &[t, bi as u64]);
-                sgld_apply_core(w_slice, gw, eps, scale, model.lam_w, model.mirror, &mut brng);
-                sgld_apply_core(ht_slice, ght, eps, scale, model.lam_h, model.mirror, &mut brng);
+                sgld_apply_core(
+                    w_slice, gw, eps, scale, model.lam_w, model.mirror, &mut brng, arena,
+                );
+                sgld_apply_core(
+                    ht_slice, ght, eps, scale, model.lam_h, model.mirror, &mut brng, arena,
+                );
             });
         }
 

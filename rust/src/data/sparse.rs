@@ -3,8 +3,11 @@
 //! For sparse MF (MovieLens) the likelihood runs over *observed* entries
 //! only; `N` in the paper's `N/|Π|` factor becomes the total nnz and
 //! `|Π|` the nnz inside the part. The block decomposition stores each
-//! grid cell as a local-index COO triple list, so a block update is one
-//! contiguous walk.
+//! grid cell in **block-local CSR** (row `indptr` + column/value
+//! arrays): a block update walks rows, so each observed row's `gw`
+//! accumulator is loaded once, updated across all the row's entries,
+//! and stored once — instead of being gathered/scattered per entry as
+//! the earlier local-index COO layout did.
 
 use crate::partition::{GridPartition, Part};
 use crate::{Error, Result};
@@ -88,19 +91,84 @@ impl Csr {
     }
 }
 
-/// One grid cell of a [`BlockedSparse`]: local-index COO, sorted by
-/// (row, col) for a cache-friendly sequential walk.
-#[derive(Clone, Debug, Default)]
+/// One grid cell of a [`BlockedSparse`] in block-local CSR: `indptr`
+/// has `nrows + 1` entries (local row `i` owns `cols`/`vals` indices
+/// `indptr[i]..indptr[i+1]`), columns within a row sorted ascending.
+#[derive(Clone, Debug)]
 pub struct BlockEntries {
-    pub rows: Vec<u32>,
-    pub cols: Vec<u32>,
-    pub vals: Vec<f32>,
+    nrows: usize,
+    indptr: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl Default for BlockEntries {
+    fn default() -> Self {
+        BlockEntries { nrows: 0, indptr: vec![0], cols: Vec::new(), vals: Vec::new() }
+    }
 }
 
 impl BlockEntries {
+    /// Append one entry. Entries must arrive sorted by (row, col) —
+    /// which the [`BlockedSparse::from_csr`] walk guarantees.
+    fn push(&mut self, li: u32, lj: u32, v: f32) {
+        debug_assert!(self.indptr.len() <= li as usize + 1, "entries must arrive row-sorted");
+        while self.indptr.len() <= li as usize {
+            self.indptr.push(self.cols.len() as u32);
+        }
+        self.cols.push(lj);
+        self.vals.push(v);
+    }
+
+    /// Pad `indptr` out to `nrows + 1` entries (closing trailing empty
+    /// rows) and fix the block's row count.
+    fn finish(&mut self, nrows: usize) {
+        while self.indptr.len() <= nrows {
+            self.indptr.push(self.cols.len() as u32);
+        }
+        self.nrows = nrows;
+    }
+
     #[inline]
     pub fn nnz(&self) -> usize {
         self.vals.len()
+    }
+
+    /// Local row count of the block (the row stripe's length).
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Row pointer array (`nrows + 1` entries).
+    #[inline]
+    pub fn indptr(&self) -> &[u32] {
+        &self.indptr
+    }
+
+    /// Local column index per stored entry, row-major.
+    #[inline]
+    pub fn cols(&self) -> &[u32] {
+        &self.cols
+    }
+
+    /// Stored values, row-major.
+    #[inline]
+    pub fn vals(&self) -> &[f32] {
+        &self.vals
+    }
+
+    /// Expand back to (local row, local col, value) triples in storage
+    /// order — the old COO view, for tests and reference kernels.
+    pub fn iter_coo(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.nrows).flat_map(move |i| {
+            let r = self.indptr[i] as usize..self.indptr[i + 1] as usize;
+            self.cols[r.clone()]
+                .iter()
+                .copied()
+                .zip(self.vals[r].iter().copied())
+                .map(move |(j, v)| (i as u32, j, v))
+        })
     }
 }
 
@@ -117,16 +185,22 @@ impl BlockedSparse {
     pub fn from_csr(csr: &Csr, b: usize) -> Result<Self> {
         let grid = GridPartition::new(csr.rows(), csr.cols(), b)?;
         let mut blocks: Vec<BlockEntries> = vec![BlockEntries::default(); b * b];
+        // The global-CSR walk visits rows ascending and columns within a
+        // row ascending, so each block receives its entries in exactly
+        // the (row, col) order its local CSR builder requires.
         for i in 0..csr.rows() {
             let bi = grid.row_stripe_of(i);
             let li = (i - grid.row_range(bi).start) as u32;
             for (j, v) in csr.row(i) {
                 let bj = grid.col_stripe_of(j as usize);
                 let lj = (j as usize - grid.col_range(bj).start) as u32;
-                let blk = &mut blocks[bi * b + bj];
-                blk.rows.push(li);
-                blk.cols.push(lj);
-                blk.vals.push(v);
+                blocks[bi * b + bj].push(li, lj, v);
+            }
+        }
+        for bi in 0..b {
+            let nrows = grid.row_range(bi).len();
+            for bj in 0..b {
+                blocks[bi * b + bj].finish(nrows);
             }
         }
         Ok(BlockedSparse { grid, blocks, nnz: csr.nnz() })
@@ -220,12 +294,31 @@ mod tests {
         assert_eq!(total, m.nnz());
         // entry (3,3)=5.0 lands in block (1,1) at local (1,1)
         let blk = bs.block(1, 1);
-        let pos = blk
-            .vals
-            .iter()
-            .position(|&v| v == 5.0)
-            .expect("value present");
-        assert_eq!((blk.rows[pos], blk.cols[pos]), (1, 1));
+        assert!(blk.iter_coo().any(|(r, c, v)| (r, c, v) == (1, 1, 5.0)));
+    }
+
+    #[test]
+    fn block_csr_indptr_is_consistent() {
+        let m = small();
+        for b in [1usize, 2, 4] {
+            let bs = BlockedSparse::from_csr(&m, b).unwrap();
+            for bi in 0..b {
+                let nrows = bs.grid().row_range(bi).len();
+                for bj in 0..b {
+                    let blk = bs.block(bi, bj);
+                    assert_eq!(blk.nrows(), nrows);
+                    assert_eq!(blk.indptr().len(), nrows + 1);
+                    assert_eq!(blk.indptr()[0], 0);
+                    assert_eq!(blk.indptr()[nrows] as usize, blk.nnz());
+                    assert!(blk.indptr().windows(2).all(|w| w[0] <= w[1]));
+                    // every column index stays inside the column stripe,
+                    // and the COO expansion matches nnz
+                    let ncols = bs.grid().col_range(bj).len();
+                    assert!(blk.cols().iter().all(|&c| (c as usize) < ncols));
+                    assert_eq!(blk.iter_coo().count(), blk.nnz());
+                }
+            }
+        }
     }
 
     #[test]

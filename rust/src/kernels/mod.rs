@@ -7,9 +7,11 @@
 //! `rust/tests/runtime_roundtrip.rs`).
 
 pub mod native;
+pub mod simd;
 
 pub use native::{
-    dense_block_grads, grads_dense_core, grads_dense_tiled, grads_sparse_core,
-    sgd_apply, sgd_apply_core, sgld_apply, sgld_apply_core, sign0,
-    sparse_block_grads, BlockGrads,
+    dense_block_grads, grads_dense_core, grads_dense_tiled, grads_sparse_coo_ref,
+    grads_sparse_core, nonneg_hint, sgd_apply, sgd_apply_core, sgld_apply,
+    sgld_apply_core, sign0, sparse_block_grads, BlockGrads,
 };
+pub use simd::{active_tier, avx2_available, set_tier_override, SimdTier};

@@ -89,26 +89,143 @@ fn tile_shape(k: usize) -> (usize, usize) {
     (ib, jb)
 }
 
-/// 4-accumulator unrolled dot product (breaks the FP dependency chain so
-/// the compiler can keep 4 FMA pipes busy without `-ffast-math`).
-#[inline]
-fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    let quads = a.len() / 4;
-    for q in 0..quads {
-        let i = 4 * q;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in 4 * quads..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+/// Instantiate the tiled dense kernel body against one SIMD ops module.
+/// The scalar and AVX2 instantiations share this single source of truth,
+/// and because the ops modules implement one canonical arithmetic order
+/// (see `kernels::simd`), the two instantiations are bitwise identical.
+macro_rules! dense_tiled_kernel {
+    ($(#[$attr:meta])* $name:ident, $ops:path) => {
+        $(#[$attr])*
+        #[allow(clippy::too_many_arguments)]
+        unsafe fn $name(
+            w: &[f32],
+            m: usize,
+            ht: &[f32],
+            n: usize,
+            k: usize,
+            v: &[f32],
+            beta: f32,
+            phi: f32,
+            nonneg: bool,
+            gw: &mut [f32],
+            ght: &mut [f32],
+            scratch: &mut ScratchArena,
+        ) -> f64 {
+            use $ops as ops;
+            let (ib, jb) = tile_shape(k);
+            let (wabs_buf, habs_t, etile) =
+                scratch.take3(if nonneg { 0 } else { m * k }, k * n, ib * jb);
+
+            // |W| (m×k); the fast path reads w directly (|x| = x).
+            let wa: &[f32] = if nonneg {
+                w
+            } else {
+                for (dst, &x) in wabs_buf.iter_mut().zip(w.iter()) {
+                    *dst = x.abs();
+                }
+                wabs_buf
+            };
+            // |H| stored K-major (k×n): habs_t[kk*n + j] = |ht[j*k + kk]|.
+            // One transposed copy per block so every inner loop streams
+            // contiguously.
+            for kk in 0..k {
+                let row = &mut habs_t[kk * n..(kk + 1) * n];
+                for (j, dst) in row.iter_mut().enumerate() {
+                    let x = ht[j * k + kk];
+                    *dst = if nonneg { x } else { x.abs() };
+                }
+            }
+
+            let mut ll = 0.0f64;
+            let mut i0 = 0;
+            while i0 < m {
+                let mi = (i0 + ib).min(m) - i0;
+                let mut j0 = 0;
+                while j0 < n {
+                    let nj = (j0 + jb).min(n) - j0;
+
+                    // mu tile:
+                    // E[ii][jj] = MU_EPS + Σ_kk |W|[i0+ii][kk] |H|[kk][j0+jj],
+                    // four K-streams at a time (rank-4 row update)
+                    for ii in 0..mi {
+                        let erow = &mut etile[ii * nj..(ii + 1) * nj];
+                        erow.fill(MU_EPS);
+                        let warow = &wa[(i0 + ii) * k..(i0 + ii) * k + k];
+                        let mut kk = 0;
+                        while kk + 4 <= k {
+                            let a = [warow[kk], warow[kk + 1], warow[kk + 2], warow[kk + 3]];
+                            let h0 = &habs_t[kk * n + j0..kk * n + j0 + nj];
+                            let h1 = &habs_t[(kk + 1) * n + j0..(kk + 1) * n + j0 + nj];
+                            let h2 = &habs_t[(kk + 2) * n + j0..(kk + 2) * n + j0 + nj];
+                            let h3 = &habs_t[(kk + 3) * n + j0..(kk + 3) * n + j0 + nj];
+                            ops::fma4(erow, a, h0, h1, h2, h3);
+                            kk += 4;
+                        }
+                        while kk < k {
+                            let a = warow[kk];
+                            let hrow = &habs_t[kk * n + j0..kk * n + j0 + nj];
+                            ops::axpy(erow, a, hrow);
+                            kk += 1;
+                        }
+                    }
+
+                    // ll + error transform in place, while the tile is L1-hot
+                    for ii in 0..mi {
+                        let erow = &mut etile[ii * nj..(ii + 1) * nj];
+                        let vrow = &v[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nj];
+                        for (ev, &vv) in erow.iter_mut().zip(vrow.iter()) {
+                            let mu = *ev;
+                            ll += loglik_entry(vv, mu, beta, phi) as f64;
+                            *ev = grad_error(vv, mu, beta, phi);
+                        }
+                    }
+
+                    // GW[i][kk] += Σ_jj E[ii][jj] |H|[kk][j0+jj]
+                    for ii in 0..mi {
+                        let erow = &etile[ii * nj..(ii + 1) * nj];
+                        let gwrow = &mut gw[(i0 + ii) * k..(i0 + ii) * k + k];
+                        for (kk, g) in gwrow.iter_mut().enumerate() {
+                            let hrow = &habs_t[kk * n + j0..kk * n + j0 + nj];
+                            *g += ops::dot(erow, hrow);
+                        }
+                    }
+
+                    // GHt[j][kk] += Σ_ii E[ii][jj] |W|[i0+ii][kk]
+                    for ii in 0..mi {
+                        let erow = &etile[ii * nj..(ii + 1) * nj];
+                        let warow = &wa[(i0 + ii) * k..(i0 + ii) * k + k];
+                        for (jj, &ev) in erow.iter().enumerate() {
+                            let ghtrow = &mut ght[(j0 + jj) * k..(j0 + jj) * k + k];
+                            ops::axpy(ghtrow, ev, warow);
+                        }
+                    }
+                    j0 += nj;
+                }
+                i0 += mi;
+            }
+
+            // sign corrections, once at the end over the accumulated
+            // totals; exact because sign ∈ {-1, 0, 1} distributes over
+            // the summed accumulator
+            if nonneg {
+                ops::zero_kill(gw, w);
+                ops::zero_kill(ght, ht);
+            } else {
+                ops::scale_by_sign(gw, w);
+                ops::scale_by_sign(ght, ht);
+            }
+            ll
+        }
+    };
 }
+
+dense_tiled_kernel!(dense_tiled_scalar, crate::kernels::simd::scalar);
+dense_tiled_kernel!(
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    dense_tiled_avx2,
+    crate::kernels::simd::avx2
+);
 
 /// Cache-tiled, allocation-free dense block gradients — the PSGLD hot
 /// path. `w` is `m×k`, `ht` is `n×k`, `v` is `m×n`, all row-major;
@@ -123,12 +240,11 @@ fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
 /// paths are bitwise identical on non-negative inputs.
 ///
 /// §Perf: instead of three full GEMM-shaped passes over an `m×n` error
-/// buffer, the work is fused per `IB × JB` tile — mu (unrolled-by-4 K
-/// loop) → elementwise ll/E → both rank-updates — while the error tile
-/// is still L1-hot; sign corrections are applied once at the end, which
-/// is exact because multiplying the summed accumulator by
-/// `sign ∈ {-1, 0, 1}` distributes over the addition. Before/after
-/// numbers in EXPERIMENTS.md §Perf.
+/// buffer, the work is fused per `IB × JB` tile — mu (rank-4 K loop) →
+/// elementwise ll/E → both rank-updates — while the error tile is still
+/// L1-hot. The inner loops dispatch once per call to the AVX2+FMA tier
+/// when the CPU has it; the scalar tier computes the identical bits
+/// (see `kernels::simd`). Before/after numbers in EXPERIMENTS.md §Perf.
 #[allow(clippy::too_many_arguments)]
 pub fn grads_dense_tiled(
     w: &[f32],
@@ -149,132 +265,28 @@ pub fn grads_dense_tiled(
     debug_assert_eq!(v.len(), m * n);
     debug_assert_eq!(gw.len(), m * k);
     debug_assert_eq!(ght.len(), n * k);
-
-    let (ib, jb) = tile_shape(k);
-    let (wabs_buf, habs_t, etile) =
-        scratch.take3(if nonneg { 0 } else { m * k }, k * n, ib * jb);
-
-    // |W| (m×k); the fast path reads w directly (|x| = x).
-    let wa: &[f32] = if nonneg {
-        w
-    } else {
-        for (dst, &x) in wabs_buf.iter_mut().zip(w.iter()) {
-            *dst = x.abs();
-        }
-        wabs_buf
-    };
-    // |H| stored K-major (k×n): habs_t[kk*n + j] = |ht[j*k + kk]|. One
-    // transposed copy per block so every inner loop streams contiguously.
-    for kk in 0..k {
-        let row = &mut habs_t[kk * n..(kk + 1) * n];
-        for (j, dst) in row.iter_mut().enumerate() {
-            let x = ht[j * k + kk];
-            *dst = if nonneg { x } else { x.abs() };
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::kernels::simd::active_tier() == crate::kernels::simd::SimdTier::Avx2Fma {
+            // SAFETY: the Avx2Fma tier is only active when runtime
+            // detection (or an explicit, caller-guarded override) says
+            // the CPU has AVX2+FMA.
+            return unsafe {
+                dense_tiled_avx2(w, m, ht, n, k, v, beta, phi, nonneg, gw, ght, scratch)
+            };
         }
     }
-
-    let mut ll = 0.0f64;
-    let mut i0 = 0;
-    while i0 < m {
-        let mi = (i0 + ib).min(m) - i0;
-        let mut j0 = 0;
-        while j0 < n {
-            let nj = (j0 + jb).min(n) - j0;
-
-            // mu tile: E[ii][jj] = MU_EPS + Σ_kk |W|[i0+ii][kk] |H|[kk][j0+jj]
-            for ii in 0..mi {
-                let erow = &mut etile[ii * nj..(ii + 1) * nj];
-                erow.fill(MU_EPS);
-                let warow = &wa[(i0 + ii) * k..(i0 + ii) * k + k];
-                let mut kk = 0;
-                while kk + 4 <= k {
-                    let (a0, a1, a2, a3) =
-                        (warow[kk], warow[kk + 1], warow[kk + 2], warow[kk + 3]);
-                    let h0 = &habs_t[kk * n + j0..kk * n + j0 + nj];
-                    let h1 = &habs_t[(kk + 1) * n + j0..(kk + 1) * n + j0 + nj];
-                    let h2 = &habs_t[(kk + 2) * n + j0..(kk + 2) * n + j0 + nj];
-                    let h3 = &habs_t[(kk + 3) * n + j0..(kk + 3) * n + j0 + nj];
-                    for jj in 0..nj {
-                        erow[jj] += a0 * h0[jj] + a1 * h1[jj] + a2 * h2[jj] + a3 * h3[jj];
-                    }
-                    kk += 4;
-                }
-                while kk < k {
-                    let a = warow[kk];
-                    let hrow = &habs_t[kk * n + j0..kk * n + j0 + nj];
-                    for (ev, &hv) in erow.iter_mut().zip(hrow.iter()) {
-                        *ev += a * hv;
-                    }
-                    kk += 1;
-                }
-            }
-
-            // ll + error transform in place, while the tile is L1-hot
-            for ii in 0..mi {
-                let erow = &mut etile[ii * nj..(ii + 1) * nj];
-                let vrow = &v[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + nj];
-                for (ev, &vv) in erow.iter_mut().zip(vrow.iter()) {
-                    let mu = *ev;
-                    ll += loglik_entry(vv, mu, beta, phi) as f64;
-                    *ev = grad_error(vv, mu, beta, phi);
-                }
-            }
-
-            // GW[i][kk] += Σ_jj E[ii][jj] |H|[kk][j0+jj]
-            for ii in 0..mi {
-                let erow = &etile[ii * nj..(ii + 1) * nj];
-                let gwrow = &mut gw[(i0 + ii) * k..(i0 + ii) * k + k];
-                for (kk, g) in gwrow.iter_mut().enumerate() {
-                    let hrow = &habs_t[kk * n + j0..kk * n + j0 + nj];
-                    *g += dot_unrolled(erow, hrow);
-                }
-            }
-
-            // GHt[j][kk] += Σ_ii E[ii][jj] |W|[i0+ii][kk]
-            for ii in 0..mi {
-                let erow = &etile[ii * nj..(ii + 1) * nj];
-                let warow = &wa[(i0 + ii) * k..(i0 + ii) * k + k];
-                for (jj, &ev) in erow.iter().enumerate() {
-                    let ghtrow = &mut ght[(j0 + jj) * k..(j0 + jj) * k + k];
-                    for (g, &wv) in ghtrow.iter_mut().zip(warow.iter()) {
-                        *g += ev * wv;
-                    }
-                }
-            }
-            j0 += nj;
-        }
-        i0 += mi;
-    }
-
-    // sign corrections, once at the end over the accumulated totals
-    if nonneg {
-        // sign ∈ {0, 1}: only exact zeros (measure-zero) need killing
-        for (g, &x) in gw.iter_mut().zip(w.iter()) {
-            if x == 0.0 {
-                *g = 0.0;
-            }
-        }
-        for (g, &x) in ght.iter_mut().zip(ht.iter()) {
-            if x == 0.0 {
-                *g = 0.0;
-            }
-        }
-    } else {
-        for (g, &x) in gw.iter_mut().zip(w.iter()) {
-            *g *= sign0(x);
-        }
-        for (g, &x) in ght.iter_mut().zip(ht.iter()) {
-            *g *= sign0(x);
-        }
-    }
-    ll
+    // SAFETY: the scalar instantiation contains no unsafe operations;
+    // it is `unsafe fn` only for signature parity with the AVX2 twin.
+    unsafe { dense_tiled_scalar(w, m, ht, n, k, v, beta, phi, nonneg, gw, ght, scratch) }
 }
 
-/// Slice-core dense block gradients — allocating convenience wrapper
-/// over [`grads_dense_tiled`] (fresh scratch, no non-negativity
-/// assumption). The pool-driven samplers call the tiled core directly
-/// with per-worker arenas; this wrapper serves one-shot callers and is
-/// the per-call-allocation baseline the benches compare against.
+/// Slice-core dense block gradients — convenience wrapper over
+/// [`grads_dense_tiled`] (no non-negativity assumption). Temporaries
+/// come from the calling thread's private grow-only arena
+/// (`with_thread_scratch`), so repeated one-shot calls are
+/// allocation-free in the steady state, like the pool path with its
+/// per-worker arenas.
 #[allow(clippy::too_many_arguments)]
 pub fn grads_dense_core(
     w: &[f32],
@@ -288,18 +300,115 @@ pub fn grads_dense_core(
     gw: &mut [f32],
     ght: &mut [f32],
 ) -> f64 {
-    let mut scratch = ScratchArena::new();
-    grads_dense_tiled(w, m, ht, n, k, v, beta, phi, false, gw, ght, &mut scratch)
+    crate::util::parallel::with_thread_scratch(|scratch| {
+        grads_dense_tiled(w, m, ht, n, k, v, beta, phi, false, gw, ght, scratch)
+    })
 }
 
-/// Slice-core sparse block gradients over a local-index COO block.
+/// Instantiate the CSR sparse kernel body against one SIMD ops module
+/// (same single-source scheme as [`dense_tiled_kernel`]).
+macro_rules! sparse_csr_kernel {
+    ($(#[$attr:meta])* $name:ident, $ops:path) => {
+        $(#[$attr])*
+        #[allow(clippy::too_many_arguments)]
+        unsafe fn $name(
+            w: &[f32],
+            ht: &[f32],
+            k: usize,
+            blk: &BlockEntries,
+            beta: f32,
+            phi: f32,
+            nonneg: bool,
+            gw: &mut [f32],
+            ght: &mut [f32],
+        ) -> f64 {
+            use $ops as ops;
+            let indptr = blk.indptr();
+            let cols = blk.cols();
+            let vals = blk.vals();
+            let mut ll = 0.0f64;
+            if nonneg {
+                for i in 0..blk.nrows() {
+                    let s = indptr[i] as usize;
+                    let e = indptr[i + 1] as usize;
+                    if s == e {
+                        continue;
+                    }
+                    // row i's W row and gw accumulator stay hot across
+                    // all of the row's entries (the CSR layout payoff)
+                    let wrow = &w[i * k..(i + 1) * k];
+                    let gwrow = &mut gw[i * k..(i + 1) * k];
+                    for idx in s..e {
+                        let j = cols[idx] as usize;
+                        let htrow = &ht[j * k..(j + 1) * k];
+                        let mu = ops::dot(wrow, htrow) + MU_EPS;
+                        let v = vals[idx];
+                        let err = grad_error(v, mu, beta, phi);
+                        ll += loglik_entry(v, mu, beta, phi) as f64;
+                        ops::axpy2(err, htrow, wrow, gwrow, &mut ght[j * k..(j + 1) * k]);
+                    }
+                }
+                // exact zeros have sign 0: kill their (measure-zero) gradient
+                ops::zero_kill(gw, w);
+                ops::zero_kill(ght, ht);
+            } else {
+                for i in 0..blk.nrows() {
+                    let s = indptr[i] as usize;
+                    let e = indptr[i + 1] as usize;
+                    if s == e {
+                        continue;
+                    }
+                    let wrow = &w[i * k..(i + 1) * k];
+                    let gwrow = &mut gw[i * k..(i + 1) * k];
+                    for idx in s..e {
+                        let j = cols[idx] as usize;
+                        let htrow = &ht[j * k..(j + 1) * k];
+                        let mu = ops::dot_abs(wrow, htrow) + MU_EPS;
+                        let v = vals[idx];
+                        let err = grad_error(v, mu, beta, phi);
+                        ll += loglik_entry(v, mu, beta, phi) as f64;
+                        // accumulate against |h| / |w|; the sign factors
+                        // are applied once below — exact, since
+                        // sign ∈ {-1, 0, 1} distributes over the sum
+                        ops::axpy2_abs(err, htrow, wrow, gwrow, &mut ght[j * k..(j + 1) * k]);
+                    }
+                }
+                ops::scale_by_sign(gw, w);
+                ops::scale_by_sign(ght, ht);
+            }
+            ll
+        }
+    };
+}
+
+sparse_csr_kernel!(sparse_csr_scalar, crate::kernels::simd::scalar);
+sparse_csr_kernel!(
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2,fma")]
+    sparse_csr_avx2,
+    crate::kernels::simd::avx2
+);
+
+/// Decide the sparse kernel's `nonneg` fast path **once per part**: the
+/// mirror flag settles it for free; otherwise scan the factors only when
+/// the per-entry work it saves (`nnz·K`) exceeds the scan cost. Callers
+/// (the samplers and the cluster simulator) must all use this helper so
+/// shared-memory and distributed chains stay bitwise identical.
+pub fn nonneg_hint(mirror: bool, w: &[f32], ht: &[f32], nnz: usize) -> bool {
+    mirror
+        || (nnz > w.len() + ht.len()
+            && w.iter().all(|&x| x >= 0.0)
+            && ht.iter().all(|&x| x >= 0.0))
+}
+
+/// Slice-core sparse block gradients over a block-local CSR block.
 ///
-/// §Perf: when the mirroring step is active the factor state is
-/// guaranteed non-negative, so `|x| = x` and `sign(x) ∈ {0, 1}` and the
-/// branch-free FMA inner loop applies. Callers that know this statically
-/// (the samplers plumb `model.mirror` through as `nonneg`) skip the
-/// O((m+n)·K) detection scan entirely; `nonneg = false` falls back to
-/// detecting it per block when the scan is cheaper than the nnz·K work.
+/// §Perf: the CSR walk keeps each observed row's `W` row and `gw`
+/// accumulator register/L1-hot across all the row's entries, and the
+/// K-loops dispatch to the AVX2+FMA tier (8-lane dot + fused axpy pair)
+/// when available — with a bitwise-identical scalar fallback. `nonneg`
+/// is authoritative here: callers hoist the decision to once per part
+/// via [`nonneg_hint`] instead of rescanning the factors per block.
 #[allow(clippy::too_many_arguments)]
 pub fn grads_sparse_core(
     w: &[f32],
@@ -312,23 +421,56 @@ pub fn grads_sparse_core(
     gw: &mut [f32],
     ght: &mut [f32],
 ) -> f64 {
+    debug_assert_eq!(gw.len(), w.len());
+    debug_assert_eq!(ght.len(), ht.len());
+    debug_assert!(blk.nrows() * k <= w.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::kernels::simd::active_tier() == crate::kernels::simd::SimdTier::Avx2Fma {
+            // SAFETY: Avx2Fma is only active on CPUs with AVX2+FMA (see
+            // `grads_dense_tiled`).
+            return unsafe { sparse_csr_avx2(w, ht, k, blk, beta, phi, nonneg, gw, ght) };
+        }
+    }
+    // SAFETY: no unsafe operations in the scalar instantiation.
+    unsafe { sparse_csr_scalar(w, ht, k, blk, beta, phi, nonneg, gw, ght) }
+}
+
+/// The pre-CSR scalar reference: a per-entry walk over explicit COO
+/// triples, kept verbatim as (a) the oracle for the CSR/SIMD
+/// equivalence tests and (b) the "before" baseline of the fig5
+/// microbench. Feed it `BlockEntries::iter_coo()` output.
+#[allow(clippy::too_many_arguments)]
+pub fn grads_sparse_coo_ref(
+    w: &[f32],
+    ht: &[f32],
+    k: usize,
+    rows: &[u32],
+    cols: &[u32],
+    vals: &[f32],
+    beta: f32,
+    phi: f32,
+    nonneg: bool,
+    gw: &mut [f32],
+    ght: &mut [f32],
+) -> f64 {
     let nonneg = nonneg
-        || (blk.vals.len() > w.len() + ht.len()
+        || (vals.len() > w.len() + ht.len()
             && w.iter().all(|&x| x >= 0.0)
             && ht.iter().all(|&x| x >= 0.0));
     let mut ll = 0.0f64;
     if nonneg {
-        for idx in 0..blk.vals.len() {
-            let i = blk.rows[idx] as usize;
-            let j = blk.cols[idx] as usize;
+        for idx in 0..vals.len() {
+            let i = rows[idx] as usize;
+            let j = cols[idx] as usize;
             let wrow = &w[i * k..(i + 1) * k];
             let htrow = &ht[j * k..(j + 1) * k];
             let mut mu = MU_EPS;
             for (&a, &b) in wrow.iter().zip(htrow.iter()) {
                 mu += a * b;
             }
-            let e = grad_error(blk.vals[idx], mu, beta, phi);
-            ll += loglik_entry(blk.vals[idx], mu, beta, phi) as f64;
+            let e = grad_error(vals[idx], mu, beta, phi);
+            ll += loglik_entry(vals[idx], mu, beta, phi) as f64;
             let gwrow = &mut gw[i * k..(i + 1) * k];
             let ghtrow = &mut ght[j * k..(j + 1) * k];
             for ((g, &hv), (gh, &wv)) in gwrow
@@ -340,7 +482,6 @@ pub fn grads_sparse_core(
                 *gh += e * wv;
             }
         }
-        // exact zeros have sign 0: kill their (measure-zero) gradient
         for (g, &x) in gw.iter_mut().zip(w.iter()) {
             if x == 0.0 {
                 *g = 0.0;
@@ -353,13 +494,13 @@ pub fn grads_sparse_core(
         }
         return ll;
     }
-    for idx in 0..blk.vals.len() {
-        let i = blk.rows[idx] as usize;
-        let j = blk.cols[idx] as usize;
+    for idx in 0..vals.len() {
+        let i = rows[idx] as usize;
+        let j = cols[idx] as usize;
         ll += accumulate_entry(
             &w[i * k..(i + 1) * k],
             &ht[j * k..(j + 1) * k],
-            blk.vals[idx],
+            vals[idx],
             beta,
             phi,
             &mut gw[i * k..(i + 1) * k],
@@ -369,10 +510,24 @@ pub fn grads_sparse_core(
     ll
 }
 
+/// Row-stripe length of the SGLD noise slab: 8 KiB of f32 — large
+/// enough to amortise the ziggurat refill, small enough to stay L1-hot
+/// alongside the `x`/`g` stripes it is fused with.
+pub const NOISE_STRIPE: usize = 2048;
+
 /// Slice-core SGLD step:
 /// `x += eps * (scale * g - lam * sign(x)) + N(0, 2 eps)`, then the
-/// optional mirroring `x = |x|` (paper Eqs. 8-9 + §3.2). Allocation-free;
-/// noise comes from the ziggurat sampler (§Perf: 3-4x over Box-Muller).
+/// optional mirroring `x = |x|` (paper Eqs. 8-9 + §3.2).
+///
+/// §Perf: noise is drawn in batches — `fill_normal_ziggurat` refills a
+/// `scratch`-backed slab of [`NOISE_STRIPE`] draws per row-stripe, so
+/// the update loop itself is a branch-free fused pass over contiguous
+/// slices (the ziggurat's rare wedge/tail branches stay out of it). The
+/// slab consumes the RNG stream exactly like the old per-element draw
+/// did, so chains keep the (seed, t, block)-keyed draw order and remain
+/// bitwise reproducible across ExecMode and worker counts — and across
+/// this PR. Allocation-free once `scratch` reaches its high-water mark.
+#[allow(clippy::too_many_arguments)]
 pub fn sgld_apply_core(
     x: &mut [f32],
     g: &[f32],
@@ -381,13 +536,31 @@ pub fn sgld_apply_core(
     lam: f32,
     mirror: bool,
     rng: &mut Rng,
+    scratch: &mut ScratchArena,
 ) {
     debug_assert_eq!(x.len(), g.len());
     let sd = (2.0 * eps).sqrt();
-    for (xv, &gv) in x.iter_mut().zip(g.iter()) {
-        let noise = crate::rng::normal_ziggurat(rng) as f32 * sd;
-        let next = *xv + eps * (scale * gv - lam * sign0(*xv)) + noise;
-        *xv = if mirror { next.abs() } else { next };
+    let n = x.len();
+    let slab = scratch.take(n.min(NOISE_STRIPE));
+    let mut start = 0;
+    while start < n {
+        let len = (n - start).min(NOISE_STRIPE);
+        let noise = &mut slab[..len];
+        crate::rng::fill_normal_ziggurat(rng, noise);
+        let xs = &mut x[start..start + len];
+        let gs = &g[start..start + len];
+        if mirror {
+            for i in 0..len {
+                let next = xs[i] + eps * (scale * gs[i] - lam * sign0(xs[i])) + noise[i] * sd;
+                xs[i] = next.abs();
+            }
+        } else {
+            for i in 0..len {
+                let next = xs[i] + eps * (scale * gs[i] - lam * sign0(xs[i])) + noise[i] * sd;
+                xs[i] = next;
+            }
+        }
+        start += len;
     }
 }
 
@@ -438,6 +611,7 @@ pub fn sparse_block_grads(
     let (m, k) = w.shape();
     let n = ht.rows();
     let mut out = BlockGrads::zeros(m, n, k);
+    let hint = nonneg_hint(false, w.as_slice(), ht.as_slice(), blk.nnz());
     out.ll = grads_sparse_core(
         w.as_slice(),
         ht.as_slice(),
@@ -445,14 +619,16 @@ pub fn sparse_block_grads(
         blk,
         beta,
         phi,
-        false,
+        hint,
         out.gw.as_mut_slice(),
         out.ght.as_mut_slice(),
     );
     out
 }
 
-/// Apply the SGLD step to one factor block in place (Mat wrapper).
+/// Apply the SGLD step to one factor block in place (Mat wrapper). The
+/// noise slab comes from the calling thread's private arena, so the
+/// signature stays scratch-free for the single-threaded samplers.
 pub fn sgld_apply(
     x: &mut Mat,
     g: &Mat,
@@ -463,7 +639,9 @@ pub fn sgld_apply(
     rng: &mut Rng,
 ) {
     debug_assert_eq!(x.shape(), g.shape());
-    sgld_apply_core(x.as_mut_slice(), g.as_slice(), eps, scale, lam, mirror, rng);
+    crate::util::parallel::with_thread_scratch(|scratch| {
+        sgld_apply_core(x.as_mut_slice(), g.as_slice(), eps, scale, lam, mirror, rng, scratch);
+    });
 }
 
 /// Noise-free (SGD) step (Mat wrapper).

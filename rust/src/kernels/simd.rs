@@ -1,0 +1,519 @@
+//! SIMD dispatch layer for the kernel hot paths.
+//!
+//! Two tiers implement one **canonical arithmetic order**:
+//!
+//! * [`avx2`] — explicit AVX2+FMA intrinsics: 8-lane f32 dot products,
+//!   fused `e·h`/`e·w` axpy pairs, and vectorised sign/zero fixups.
+//! * [`scalar`] — a portable fallback that mimics the SIMD arithmetic
+//!   exactly: 8 independent accumulator lanes combined in the same
+//!   reduction tree, with `f32::mul_add` wherever the AVX2 tier issues
+//!   an FMA. Both tiers are **bitwise identical** on every input the
+//!   samplers produce (asserted in `rust/tests/simd_csr.rs`), which is
+//!   what keeps chains reproducible across machines with and without
+//!   AVX2.
+//!
+//! The active tier is chosen once at runtime via
+//! `is_x86_feature_detected!` (overridable with `PALLAS_SIMD=scalar`
+//! in the environment, or programmatically with [`set_tier_override`]
+//! — a test/bench hook). Kernels read [`active_tier`] once per call and
+//! branch to a fully monomorphised loop, so dispatch costs nothing per
+//! entry.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction tier a kernel body runs with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable fallback (canonical-order `mul_add` loops).
+    Scalar,
+    /// AVX2 + FMA intrinsics (x86-64, runtime-detected).
+    Avx2Fma,
+}
+
+const OVERRIDE_NONE: u8 = u8::MAX;
+static OVERRIDE: AtomicU8 = AtomicU8::new(OVERRIDE_NONE);
+static DETECTED: OnceLock<SimdTier> = OnceLock::new();
+
+/// True when this CPU supports the AVX2+FMA tier.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn detect() -> SimdTier {
+    if let Ok(v) = std::env::var("PALLAS_SIMD") {
+        if matches!(v.trim().to_ascii_lowercase().as_str(), "scalar" | "off" | "0") {
+            return SimdTier::Scalar;
+        }
+    }
+    if avx2_available() {
+        SimdTier::Avx2Fma
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+/// The tier kernels dispatch to. Detection runs once; an override (test
+/// hook) takes precedence. Because the tiers are bitwise identical,
+/// flipping the override at any point never changes numerical results.
+pub fn active_tier() -> SimdTier {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => SimdTier::Scalar,
+        1 => SimdTier::Avx2Fma,
+        _ => *DETECTED.get_or_init(detect),
+    }
+}
+
+/// Force a tier (tests/benches only; `None` restores auto-detection).
+/// Forcing `Avx2Fma` on a CPU without AVX2+FMA is undefined behaviour —
+/// guard with [`avx2_available`].
+pub fn set_tier_override(tier: Option<SimdTier>) {
+    let v = match tier {
+        None => OVERRIDE_NONE,
+        Some(SimdTier::Scalar) => 0,
+        Some(SimdTier::Avx2Fma) => 1,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Portable canonical-order implementations. Every function here is the
+/// bitwise reference for its [`avx2`] twin: 8 accumulator lanes, the
+/// same reduction tree, `mul_add` for each fused multiply-add.
+pub mod scalar {
+    /// Reduction tree shared with the AVX2 horizontal sum:
+    /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`.
+    #[inline]
+    pub(super) fn reduce8(l: [f32; 8]) -> f32 {
+        let s04 = l[0] + l[4];
+        let s15 = l[1] + l[5];
+        let s26 = l[2] + l[6];
+        let s37 = l[3] + l[7];
+        (s04 + s26) + (s15 + s37)
+    }
+
+    /// 8-lane dot product: lane `j` accumulates elements `j, j+8, ...`
+    /// with FMA; lanes reduce via [`reduce8`]; the tail (`len % 8`)
+    /// folds in sequentially.
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut l = [0f32; 8];
+        for c in 0..chunks {
+            let i = c * 8;
+            for j in 0..8 {
+                l[j] = a[i + j].mul_add(b[i + j], l[j]);
+            }
+        }
+        let mut s = reduce8(l);
+        for i in chunks * 8..n {
+            s = a[i].mul_add(b[i], s);
+        }
+        s
+    }
+
+    /// [`dot`] over `|a|·|b|` (the generic mu accumulation).
+    #[inline]
+    pub fn dot_abs(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut l = [0f32; 8];
+        for c in 0..chunks {
+            let i = c * 8;
+            for j in 0..8 {
+                l[j] = a[i + j].abs().mul_add(b[i + j].abs(), l[j]);
+            }
+        }
+        let mut s = reduce8(l);
+        for i in chunks * 8..n {
+            s = a[i].abs().mul_add(b[i].abs(), s);
+        }
+        s
+    }
+
+    /// `y[i] += a * x[i]` (FMA per element).
+    #[inline]
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+            *yv = a.mul_add(xv, *yv);
+        }
+    }
+
+    /// Fused gradient pair for one observed entry:
+    /// `gw[i] += e * h[i]`, `ght[i] += e * w[i]`.
+    #[inline]
+    pub fn axpy2(e: f32, h: &[f32], w: &[f32], gw: &mut [f32], ght: &mut [f32]) {
+        let k = h.len();
+        debug_assert_eq!(w.len(), k);
+        debug_assert_eq!(gw.len(), k);
+        debug_assert_eq!(ght.len(), k);
+        for i in 0..k {
+            gw[i] = e.mul_add(h[i], gw[i]);
+            ght[i] = e.mul_add(w[i], ght[i]);
+        }
+    }
+
+    /// [`axpy2`] over `|h|`/`|w|` (generic path; signs are applied once
+    /// over the accumulated totals, which distributes exactly).
+    #[inline]
+    pub fn axpy2_abs(e: f32, h: &[f32], w: &[f32], gw: &mut [f32], ght: &mut [f32]) {
+        let k = h.len();
+        debug_assert_eq!(w.len(), k);
+        debug_assert_eq!(gw.len(), k);
+        debug_assert_eq!(ght.len(), k);
+        for i in 0..k {
+            gw[i] = e.mul_add(h[i].abs(), gw[i]);
+            ght[i] = e.mul_add(w[i].abs(), ght[i]);
+        }
+    }
+
+    /// Four simultaneous rank-1 row updates (the dense mu-tile inner
+    /// loop): `erow[i] += a0 h0[i] + a1 h1[i] + a2 h2[i] + a3 h3[i]`,
+    /// evaluated as a nested FMA chain from `a3` inwards.
+    #[inline]
+    pub fn fma4(erow: &mut [f32], a: [f32; 4], h0: &[f32], h1: &[f32], h2: &[f32], h3: &[f32]) {
+        let n = erow.len();
+        debug_assert!(h0.len() == n && h1.len() == n && h2.len() == n && h3.len() == n);
+        for i in 0..n {
+            erow[i] = a[0].mul_add(
+                h0[i],
+                a[1].mul_add(h1[i], a[2].mul_add(h2[i], a[3].mul_add(h3[i], erow[i]))),
+            );
+        }
+    }
+
+    /// Kill gradient entries whose parameter is exactly zero
+    /// (`sign(0) = 0` on the non-negative fast path).
+    #[inline]
+    pub fn zero_kill(g: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(g.len(), x.len());
+        for (gv, &xv) in g.iter_mut().zip(x.iter()) {
+            if xv == 0.0 {
+                *gv = 0.0;
+            }
+        }
+    }
+
+    /// `g[i] *= sign0(x[i])` — the deferred sign fixup of the generic
+    /// (possibly-negative) path.
+    #[inline]
+    pub fn scale_by_sign(g: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(g.len(), x.len());
+        for (gv, &xv) in g.iter_mut().zip(x.iter()) {
+            *gv *= super::super::native::sign0(xv);
+        }
+    }
+}
+
+/// AVX2+FMA twins of [`scalar`]. Every function requires the `avx2` and
+/// `fma` CPU features (callers dispatch through [`active_tier`]); that
+/// shared precondition is the only safety obligation, so it is stated
+/// here once rather than per function.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::missing_safety_doc)]
+pub mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum matching [`super::scalar::reduce8`]'s tree.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn reduce8(acc: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps(acc, 1);
+        let s4 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 1));
+        _mm_cvtss_f32(s1)
+    }
+
+    /// `|x|` by masking the sign bit (exact).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn absv(x: __m256) -> __m256 {
+        _mm256_and_ps(x, _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff)))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(av, bv, acc);
+        }
+        let mut s = reduce8(acc);
+        for i in chunks * 8..n {
+            s = a[i].mul_add(b[i], s);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_abs(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let av = absv(_mm256_loadu_ps(a.as_ptr().add(i)));
+            let bv = absv(_mm256_loadu_ps(b.as_ptr().add(i)));
+            acc = _mm256_fmadd_ps(av, bv, acc);
+        }
+        let mut s = reduce8(acc);
+        for i in chunks * 8..n {
+            s = a[i].abs().mul_add(b[i].abs(), s);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let chunks = n / 8;
+        let av = _mm256_set1_ps(a);
+        for c in 0..chunks {
+            let i = c * 8;
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(av, xv, yv));
+        }
+        for i in chunks * 8..n {
+            y[i] = a.mul_add(x[i], y[i]);
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy2(e: f32, h: &[f32], w: &[f32], gw: &mut [f32], ght: &mut [f32]) {
+        let k = h.len();
+        debug_assert_eq!(w.len(), k);
+        debug_assert_eq!(gw.len(), k);
+        debug_assert_eq!(ght.len(), k);
+        let ev = _mm256_set1_ps(e);
+        let chunks = k / 8;
+        for c in 0..chunks {
+            let i = c * 8;
+            let hv = _mm256_loadu_ps(h.as_ptr().add(i));
+            let gwv = _mm256_loadu_ps(gw.as_ptr().add(i));
+            _mm256_storeu_ps(gw.as_mut_ptr().add(i), _mm256_fmadd_ps(ev, hv, gwv));
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            let ghv = _mm256_loadu_ps(ght.as_ptr().add(i));
+            _mm256_storeu_ps(ght.as_mut_ptr().add(i), _mm256_fmadd_ps(ev, wv, ghv));
+        }
+        for i in chunks * 8..k {
+            gw[i] = e.mul_add(h[i], gw[i]);
+            ght[i] = e.mul_add(w[i], ght[i]);
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy2_abs(e: f32, h: &[f32], w: &[f32], gw: &mut [f32], ght: &mut [f32]) {
+        let k = h.len();
+        debug_assert_eq!(w.len(), k);
+        debug_assert_eq!(gw.len(), k);
+        debug_assert_eq!(ght.len(), k);
+        let ev = _mm256_set1_ps(e);
+        let chunks = k / 8;
+        for c in 0..chunks {
+            let i = c * 8;
+            let hv = absv(_mm256_loadu_ps(h.as_ptr().add(i)));
+            let gwv = _mm256_loadu_ps(gw.as_ptr().add(i));
+            _mm256_storeu_ps(gw.as_mut_ptr().add(i), _mm256_fmadd_ps(ev, hv, gwv));
+            let wv = absv(_mm256_loadu_ps(w.as_ptr().add(i)));
+            let ghv = _mm256_loadu_ps(ght.as_ptr().add(i));
+            _mm256_storeu_ps(ght.as_mut_ptr().add(i), _mm256_fmadd_ps(ev, wv, ghv));
+        }
+        for i in chunks * 8..k {
+            gw[i] = e.mul_add(h[i].abs(), gw[i]);
+            ght[i] = e.mul_add(w[i].abs(), ght[i]);
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fma4(
+        erow: &mut [f32],
+        a: [f32; 4],
+        h0: &[f32],
+        h1: &[f32],
+        h2: &[f32],
+        h3: &[f32],
+    ) {
+        let n = erow.len();
+        debug_assert!(h0.len() == n && h1.len() == n && h2.len() == n && h3.len() == n);
+        let a0 = _mm256_set1_ps(a[0]);
+        let a1 = _mm256_set1_ps(a[1]);
+        let a2 = _mm256_set1_ps(a[2]);
+        let a3 = _mm256_set1_ps(a[3]);
+        let chunks = n / 8;
+        for c in 0..chunks {
+            let i = c * 8;
+            let mut e = _mm256_loadu_ps(erow.as_ptr().add(i));
+            e = _mm256_fmadd_ps(a3, _mm256_loadu_ps(h3.as_ptr().add(i)), e);
+            e = _mm256_fmadd_ps(a2, _mm256_loadu_ps(h2.as_ptr().add(i)), e);
+            e = _mm256_fmadd_ps(a1, _mm256_loadu_ps(h1.as_ptr().add(i)), e);
+            e = _mm256_fmadd_ps(a0, _mm256_loadu_ps(h0.as_ptr().add(i)), e);
+            _mm256_storeu_ps(erow.as_mut_ptr().add(i), e);
+        }
+        for i in chunks * 8..n {
+            erow[i] = a[0].mul_add(
+                h0[i],
+                a[1].mul_add(h1[i], a[2].mul_add(h2[i], a[3].mul_add(h3[i], erow[i]))),
+            );
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn zero_kill(g: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(g.len(), x.len());
+        let n = g.len();
+        let chunks = n / 8;
+        let zero = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            // NEQ_UQ: true for x != 0 and for NaN, matching the scalar
+            // `if x == 0.0` test exactly (including -0.0).
+            let keep = _mm256_cmp_ps::<{ _CMP_NEQ_UQ }>(xv, zero);
+            let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+            _mm256_storeu_ps(g.as_mut_ptr().add(i), _mm256_and_ps(gv, keep));
+        }
+        for i in chunks * 8..n {
+            if x[i] == 0.0 {
+                g[i] = 0.0;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale_by_sign(g: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(g.len(), x.len());
+        let n = g.len();
+        let chunks = n / 8;
+        let zero = _mm256_setzero_ps();
+        let neg0 = _mm256_set1_ps(-0.0);
+        let one = _mm256_set1_ps(1.0);
+        for c in 0..chunks {
+            let i = c * 8;
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            // ±1 by sign bit, zeroed where x == ±0, NaN where x is NaN
+            // — exactly sign0's value set.
+            let s = _mm256_or_ps(_mm256_and_ps(xv, neg0), one);
+            let nz = _mm256_cmp_ps::<{ _CMP_NEQ_UQ }>(xv, zero);
+            let s = _mm256_and_ps(s, nz);
+            let nan = _mm256_cmp_ps::<{ _CMP_UNORD_Q }>(xv, xv);
+            let s = _mm256_blendv_ps(s, xv, nan);
+            let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+            _mm256_storeu_ps(g.as_mut_ptr().add(i), _mm256_mul_ps(gv, s));
+        }
+        for i in chunks * 8..n {
+            g[i] *= super::super::native::sign0(x[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let a: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.37 - 3.0) * 0.71).collect();
+        let b: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.13 + 0.2) * -0.53).collect();
+        (a, b)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn tiers_agree_bitwise_on_all_ops() {
+        if !avx2_available() {
+            eprintln!("skipping: no AVX2+FMA on this host");
+            return;
+        }
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 17, 31, 64, 100] {
+            let (a, b) = vecs(n);
+            assert_eq!(scalar::dot(&a, &b), unsafe { avx2::dot(&a, &b) }, "dot n={n}");
+            assert_eq!(
+                scalar::dot_abs(&a, &b),
+                unsafe { avx2::dot_abs(&a, &b) },
+                "dot_abs n={n}"
+            );
+
+            let (mut y1, x) = vecs(n);
+            let mut y2 = y1.clone();
+            scalar::axpy(&mut y1, 0.77, &x);
+            unsafe { avx2::axpy(&mut y2, 0.77, &x) };
+            assert_eq!(y1, y2, "axpy n={n}");
+
+            let (h, w) = vecs(n);
+            let mut gw1 = vec![0.25f32; n];
+            let mut ght1 = vec![-0.5f32; n];
+            let (mut gw2, mut ght2) = (gw1.clone(), ght1.clone());
+            scalar::axpy2(1.3, &h, &w, &mut gw1, &mut ght1);
+            unsafe { avx2::axpy2(1.3, &h, &w, &mut gw2, &mut ght2) };
+            assert_eq!(gw1, gw2, "axpy2 gw n={n}");
+            assert_eq!(ght1, ght2, "axpy2 ght n={n}");
+            scalar::axpy2_abs(-0.9, &h, &w, &mut gw1, &mut ght1);
+            unsafe { avx2::axpy2_abs(-0.9, &h, &w, &mut gw2, &mut ght2) };
+            assert_eq!(gw1, gw2, "axpy2_abs gw n={n}");
+            assert_eq!(ght1, ght2, "axpy2_abs ght n={n}");
+
+            let (mut e1, h0) = vecs(n);
+            let mut e2 = e1.clone();
+            let h1: Vec<f32> = h0.iter().map(|v| v * 1.7 - 0.3).collect();
+            let h2: Vec<f32> = h0.iter().map(|v| v * -0.6 + 0.1).collect();
+            let h3: Vec<f32> = h0.iter().map(|v| v * 0.2 + 2.0).collect();
+            let coef = [0.3f32, -1.2, 0.8, 0.05];
+            scalar::fma4(&mut e1, coef, &h0, &h1, &h2, &h3);
+            unsafe { avx2::fma4(&mut e2, coef, &h0, &h1, &h2, &h3) };
+            assert_eq!(e1, e2, "fma4 n={n}");
+
+            // sign fixups, with exact zeros and negative zeros mixed in
+            let mut xs = a.clone();
+            if n > 2 {
+                xs[1] = 0.0;
+                xs[2] = -0.0;
+            }
+            let mut g1 = b.clone();
+            let mut g2 = b.clone();
+            scalar::zero_kill(&mut g1, &xs);
+            unsafe { avx2::zero_kill(&mut g2, &xs) };
+            assert_eq!(g1, g2, "zero_kill n={n}");
+            let mut g1 = b.clone();
+            let mut g2 = b.clone();
+            scalar::scale_by_sign(&mut g1, &xs);
+            unsafe { avx2::scale_by_sign(&mut g2, &xs) };
+            assert_eq!(g1, g2, "scale_by_sign n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_plain_sum_approximately() {
+        let (a, b) = vecs(37);
+        let naive: f32 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+        assert!((scalar::dot(&a, &b) - naive).abs() < 1e-3 * naive.abs().max(1.0));
+        let naive_abs: f32 = a.iter().zip(b.iter()).map(|(x, y)| x.abs() * y.abs()).sum();
+        assert!((scalar::dot_abs(&a, &b) - naive_abs).abs() < 1e-3 * naive_abs.max(1.0));
+    }
+
+    #[test]
+    fn override_round_trips() {
+        set_tier_override(Some(SimdTier::Scalar));
+        assert_eq!(active_tier(), SimdTier::Scalar);
+        set_tier_override(None);
+        let _ = active_tier(); // whatever detection says; just must not panic
+    }
+}

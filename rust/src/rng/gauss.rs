@@ -47,10 +47,12 @@ fn tables() -> &'static Tables {
     })
 }
 
-/// One standard-normal draw via the ziggurat.
+/// One draw from a resolved table reference. [`normal_ziggurat`] and
+/// [`fill_normal_ziggurat`] both go through here, so they consume the
+/// RNG stream identically — a chain that switches between per-draw and
+/// batched noise stays bitwise reproducible.
 #[inline]
-pub fn normal_ziggurat(rng: &mut Rng) -> f64 {
-    let t = tables();
+fn sample(t: &Tables, rng: &mut Rng) -> f64 {
     loop {
         let bits = rng.next_u64();
         let i = (bits & (C as u64 - 1)) as usize;
@@ -79,6 +81,23 @@ pub fn normal_ziggurat(rng: &mut Rng) -> f64 {
     }
 }
 
+/// One standard-normal draw via the ziggurat.
+#[inline]
+pub fn normal_ziggurat(rng: &mut Rng) -> f64 {
+    sample(tables(), rng)
+}
+
+/// Fill `out` with standard-normal f32 draws. The table lookup is hoisted
+/// out of the loop and the (rare) slow paths stay out of the caller's
+/// instruction stream, which is what makes the SGLD noise slab refill
+/// cheap; draw `i` is exactly `normal_ziggurat` draw `i` narrowed to f32.
+pub fn fill_normal_ziggurat(rng: &mut Rng, out: &mut [f32]) {
+    let t = tables();
+    for o in out.iter_mut() {
+        *o = sample(t, rng) as f32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +117,22 @@ mod tests {
             let area = t.x[i] * (density(t.x[i + 1]) - density(t.x[i]));
             assert!((area - V).abs() < 1e-9, "layer {i} area {area}");
         }
+    }
+
+    #[test]
+    fn fill_matches_per_draw_stream_bitwise() {
+        // enough draws to hit the wedge and tail slow paths too
+        let n = 100_000;
+        let mut r1 = Rng::seed_from(123);
+        let mut r2 = Rng::seed_from(123);
+        let mut batched = vec![0f32; n];
+        fill_normal_ziggurat(&mut r1, &mut batched);
+        for (i, &b) in batched.iter().enumerate() {
+            let single = normal_ziggurat(&mut r2) as f32;
+            assert!(single.to_bits() == b.to_bits(), "draw {i}: {single} vs {b}");
+        }
+        // and the streams end in the same state
+        assert_eq!(r1.next_u64(), r2.next_u64());
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod dist;
 pub mod gauss;
 
 pub use dist::Dist;
-pub use gauss::normal_ziggurat;
+pub use gauss::{fill_normal_ziggurat, normal_ziggurat};
 
 /// SplitMix64 step — used for seeding and for tag hashing.
 #[inline]

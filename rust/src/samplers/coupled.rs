@@ -207,9 +207,9 @@ impl Sampler for CoupledPsgld {
                 *a = scale1 * *a + scale2 * x;
             }
             let mut brng = Rng::derive(seed, &[t, bi as u64, 0xc0]);
-            sgld_apply_core(w, gw, eps, 1.0, model.lam_w, model.mirror, &mut brng);
-            sgld_apply_core(ht1, g1, eps, scale1, model.lam_h, model.mirror, &mut brng);
-            sgld_apply_core(ht2, g2, eps, scale2, model.lam_h, model.mirror, &mut brng);
+            sgld_apply_core(w, gw, eps, 1.0, model.lam_w, model.mirror, &mut brng, arena);
+            sgld_apply_core(ht1, g1, eps, scale1, model.lam_h, model.mirror, &mut brng, arena);
+            sgld_apply_core(ht2, g2, eps, scale2, model.lam_h, model.mirror, &mut brng, arena);
         });
 
         // refresh the exposed (W, H1) view in place — no per-step clone

@@ -18,7 +18,9 @@
 
 use crate::config::RunConfig;
 use crate::data::sparse::{BlockedSparse, Csr};
-use crate::kernels::{grads_dense_tiled, grads_sparse_core, sgd_apply_core, sgld_apply_core};
+use crate::kernels::{
+    grads_dense_tiled, grads_sparse_core, nonneg_hint, sgd_apply_core, sgld_apply_core,
+};
 use crate::linalg::Mat;
 use crate::metrics;
 use crate::model::NmfModel;
@@ -51,7 +53,7 @@ pub enum ExecMode {
 enum DataBlocks {
     /// Dense: block `(bi, bj)` at `bi * B + bj` (row-major `m × n`).
     Dense(Vec<Mat>),
-    /// Sparse: local-index COO per block.
+    /// Sparse: block-local CSR per block.
     Sparse(BlockedSparse),
 }
 
@@ -236,6 +238,19 @@ impl Sampler for Psgld {
             DataBlocks::Dense(_) => self.grid.scale_dense(&self.part),
             DataBlocks::Sparse(bs) => bs.scale(&self.part),
         };
+        // The sparse kernel's nonneg fast path is decided once per part
+        // from the pre-step state (the mirror flag settles it for free),
+        // not rescanned per block. The cluster simulator mirrors this
+        // computation exactly — keep the two in sync.
+        let sparse_nonneg = match &self.data {
+            DataBlocks::Dense(_) => self.model.mirror,
+            DataBlocks::Sparse(bs) => nonneg_hint(
+                self.model.mirror,
+                self.state.w.as_slice(),
+                self.state.ht.as_slice(),
+                bs.nnz(),
+            ),
+        };
 
         // Base pointers for the in-place stripe updates. The closure
         // below re-derives each block's W row-stripe and Ht col-stripe
@@ -284,7 +299,7 @@ impl Sampler for Psgld {
                 DataBlocks::Sparse(bs) => {
                     let _ = grads_sparse_core(
                         w, ht, k, bs.block(bi, bj),
-                        model.beta, model.phi, model.mirror,
+                        model.beta, model.phi, sparse_nonneg,
                         gw, ght,
                     );
                 }
@@ -293,8 +308,8 @@ impl Sampler for Psgld {
             // which worker slot runs the block.
             let mut brng = Rng::derive(seed, &[t, bi as u64]);
             if langevin {
-                sgld_apply_core(w, gw, eps, scale, model.lam_w, model.mirror, &mut brng);
-                sgld_apply_core(ht, ght, eps, scale, model.lam_h, model.mirror, &mut brng);
+                sgld_apply_core(w, gw, eps, scale, model.lam_w, model.mirror, &mut brng, arena);
+                sgld_apply_core(ht, ght, eps, scale, model.lam_h, model.mirror, &mut brng, arena);
             } else {
                 sgd_apply_core(w, gw, eps, scale, model.lam_w, model.mirror);
                 sgd_apply_core(ht, ght, eps, scale, model.lam_h, model.mirror);

@@ -82,6 +82,29 @@ impl ScratchArena {
         let (xb, rest) = rest.split_at_mut(b);
         (xa, xb, &mut rest[..c])
     }
+
+    /// One view of `n` elements (same garbage-contents contract as
+    /// [`take3`]). Used for the SGLD noise slab.
+    pub fn take(&mut self, n: usize) -> &mut [f32] {
+        if self.buf.len() < n {
+            self.buf.resize(n, 0.0);
+        }
+        &mut self.buf[..n]
+    }
+}
+
+/// Run `f` with this thread's private [`ScratchArena`]. The arena is
+/// grow-only and lives for the thread's lifetime, so repeated calls from
+/// the same thread are allocation-free once the high-water mark is
+/// reached — this is what backs the one-shot kernel wrappers
+/// (`grads_dense_core`, the `Mat` SGLD wrapper) without changing their
+/// signatures.
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut ScratchArena) -> R) -> R {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<ScratchArena> =
+            std::cell::RefCell::new(ScratchArena::new());
+    }
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 /// Covariant raw-pointer wrapper that asserts cross-thread safety. Used
@@ -534,6 +557,25 @@ mod tests {
         let (a, _, _) = arena.take3(2, 2, 2);
         assert_eq!(a, &[1.0, 1.0]); // old contents visible: views are raw
         assert_eq!(arena.len(), 12);
+    }
+
+    #[test]
+    fn take_single_view_and_thread_scratch_reuse() {
+        let mut arena = ScratchArena::new();
+        arena.take(8).fill(7.0);
+        assert_eq!(arena.len(), 8);
+        // shrinking request reuses the buffer and exposes old contents
+        assert_eq!(arena.take(4), &[7.0; 4]);
+        assert_eq!(arena.len(), 8);
+
+        let first = with_thread_scratch(|s| {
+            s.take(16).fill(1.0);
+            s.len()
+        });
+        // the same thread gets the same (already grown) arena back
+        let second = with_thread_scratch(|s| s.len());
+        assert_eq!(first, 16);
+        assert_eq!(second, 16);
     }
 
     #[test]

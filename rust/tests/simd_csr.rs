@@ -1,0 +1,303 @@
+//! Equivalence pins for the §Perf sparse/SIMD work:
+//!
+//! * the block-local CSR kernel agrees with the pre-PR local-index COO
+//!   reference walk (`grads_sparse_coo_ref`) on every block,
+//! * the scalar and AVX2+FMA tiers are **bitwise** identical — they
+//!   share one canonical arithmetic order (8-lane split accumulators,
+//!   fixed reduction tree, `mul_add` tails), so switching tiers can
+//!   never change a chain,
+//! * full sparse PSGLD chains are bitwise identical across
+//!   {scalar, SIMD} x {1, 2, default} workers,
+//! * the batched Langevin noise slab consumes the RNG stream exactly
+//!   like a per-element draw.
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+use psgld::config::{RunConfig, StepSchedule};
+use psgld::data::movielens;
+use psgld::data::sparse::BlockedSparse;
+use psgld::kernels::{
+    avx2_available, grads_dense_tiled, grads_sparse_coo_ref, grads_sparse_core, nonneg_hint,
+    set_tier_override, sgld_apply_core, sign0, SimdTier,
+};
+use psgld::linalg::Mat;
+use psgld::model::NmfModel;
+use psgld::rng::{normal_ziggurat, Rng};
+use psgld::samplers::{ExecMode, Psgld, Sampler};
+use psgld::util::parallel::{default_threads, ScratchArena};
+
+/// The SIMD tier override is process-global; tests that touch it hold
+/// this lock and restore the auto-detected tier on drop.
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+struct TierGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl<'a> TierGuard<'a> {
+    fn acquire() -> Self {
+        TierGuard(TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for TierGuard<'_> {
+    fn drop(&mut self) {
+        set_tier_override(None);
+    }
+}
+
+const KS: [usize; 4] = [1, 3, 8, 17];
+
+fn mixed_sign_factors(m: usize, n: usize, k: usize, rng: &mut Rng) -> (Mat, Mat) {
+    (
+        Mat::uniform(m, k, -1.0, 1.0, rng),
+        Mat::uniform(n, k, -1.0, 1.0, rng),
+    )
+}
+
+fn positive_factors(m: usize, n: usize, k: usize, rng: &mut Rng) -> (Mat, Mat) {
+    (
+        Mat::uniform(m, k, 0.05, 1.0, rng),
+        Mat::uniform(n, k, 0.05, 1.0, rng),
+    )
+}
+
+fn block_dims(bs: &BlockedSparse, bi: usize, bj: usize) -> (Range<usize>, Range<usize>) {
+    (bs.grid().row_range(bi), bs.grid().col_range(bj))
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = 1e-4 * x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// The CSR kernel reproduces the pre-PR COO walk on every block of the
+/// grid, for both the nonneg fast path and the generic signed path, at
+/// awkward K values (lane tails of 1, 3, 0, 1 against the 8-lane body).
+#[test]
+fn csr_kernel_matches_coo_reference_walk() {
+    let _g = TierGuard::acquire();
+    set_tier_override(Some(SimdTier::Scalar));
+    let csr = movielens::movielens_like_dims(37, 41, 700, 4, 11);
+    let bs = BlockedSparse::from_csr(&csr, 3).unwrap();
+    let mut rng = Rng::seed_from(42);
+    for &k in &KS {
+        for nonneg in [false, true] {
+            for bi in 0..3 {
+                for bj in 0..3 {
+                    let blk = bs.block(bi, bj);
+                    let (rr, cr) = block_dims(&bs, bi, bj);
+                    let (m, n) = (rr.len(), cr.len());
+                    let (w, ht) = if nonneg {
+                        positive_factors(m, n, k, &mut rng)
+                    } else {
+                        mixed_sign_factors(m, n, k, &mut rng)
+                    };
+                    let (mut rows, mut cols, mut vals) = (Vec::new(), Vec::new(), Vec::new());
+                    for (r, c, v) in blk.iter_coo() {
+                        rows.push(r);
+                        cols.push(c);
+                        vals.push(v);
+                    }
+                    let mut gw_a = vec![0f32; m * k];
+                    let mut ght_a = vec![0f32; n * k];
+                    let ll_a = grads_sparse_coo_ref(
+                        w.as_slice(), ht.as_slice(), k, &rows, &cols, &vals, 1.0, 1.0,
+                        nonneg, &mut gw_a, &mut ght_a,
+                    );
+                    let mut gw_b = vec![0f32; m * k];
+                    let mut ght_b = vec![0f32; n * k];
+                    let ll_b = grads_sparse_core(
+                        w.as_slice(), ht.as_slice(), k, blk, 1.0, 1.0, nonneg,
+                        &mut gw_b, &mut ght_b,
+                    );
+                    let tag = format!("K={k} nonneg={nonneg} block=({bi},{bj})");
+                    assert_close(&gw_a, &gw_b, &format!("gw {tag}"));
+                    assert_close(&ght_a, &ght_b, &format!("ght {tag}"));
+                    assert!(
+                        (ll_a - ll_b).abs() <= 1e-3 * ll_a.abs().max(1.0),
+                        "ll {tag}: {ll_a} vs {ll_b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Scalar and AVX2+FMA tiers produce bit-for-bit identical sparse block
+/// gradients: same lane split, same reduction tree, same fused tails.
+#[test]
+fn sparse_scalar_and_simd_tiers_bitwise_identical() {
+    if !avx2_available() {
+        eprintln!("skipping: AVX2+FMA not available on this host");
+        return;
+    }
+    let _g = TierGuard::acquire();
+    let csr = movielens::movielens_like_dims(53, 47, 900, 4, 7);
+    let bs = BlockedSparse::from_csr(&csr, 2).unwrap();
+    let mut rng = Rng::seed_from(7);
+    for &k in &KS {
+        for nonneg in [false, true] {
+            let blk = bs.block(0, 1);
+            let (rr, cr) = block_dims(&bs, 0, 1);
+            let (m, n) = (rr.len(), cr.len());
+            let (w, ht) = if nonneg {
+                positive_factors(m, n, k, &mut rng)
+            } else {
+                mixed_sign_factors(m, n, k, &mut rng)
+            };
+            let run = |tier: SimdTier| {
+                set_tier_override(Some(tier));
+                let mut gw = vec![0f32; m * k];
+                let mut ght = vec![0f32; n * k];
+                let ll = grads_sparse_core(
+                    w.as_slice(), ht.as_slice(), k, blk, 1.0, 1.0, nonneg, &mut gw, &mut ght,
+                );
+                (gw, ght, ll)
+            };
+            let (gw_s, ght_s, ll_s) = run(SimdTier::Scalar);
+            let (gw_v, ght_v, ll_v) = run(SimdTier::Avx2Fma);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&gw_s), bits(&gw_v), "gw K={k} nonneg={nonneg}");
+            assert_eq!(bits(&ght_s), bits(&ght_v), "ght K={k} nonneg={nonneg}");
+            assert_eq!(ll_s.to_bits(), ll_v.to_bits(), "ll K={k} nonneg={nonneg}");
+        }
+    }
+}
+
+/// Same bitwise contract for the tiled dense kernel, which routes its
+/// mu/GW/GHt inner loops through the same ops tables.
+#[test]
+fn dense_scalar_and_simd_tiers_bitwise_identical() {
+    if !avx2_available() {
+        eprintln!("skipping: AVX2+FMA not available on this host");
+        return;
+    }
+    let _g = TierGuard::acquire();
+    let mut rng = Rng::seed_from(11);
+    let (m, n) = (33usize, 29usize);
+    for &k in &KS {
+        for nonneg in [false, true] {
+            let (w, ht) = if nonneg {
+                positive_factors(m, n, k, &mut rng)
+            } else {
+                mixed_sign_factors(m, n, k, &mut rng)
+            };
+            let v = Mat::uniform(m, n, 0.0, 8.0, &mut rng);
+            let run = |tier: SimdTier| {
+                set_tier_override(Some(tier));
+                let mut gw = vec![0f32; m * k];
+                let mut ght = vec![0f32; n * k];
+                let mut scratch = ScratchArena::new();
+                let ll = grads_dense_tiled(
+                    w.as_slice(), m, ht.as_slice(), n, k, v.as_slice(), 1.0, 1.0,
+                    nonneg, &mut gw, &mut ght, &mut scratch,
+                );
+                (gw, ght, ll)
+            };
+            let (gw_s, ght_s, ll_s) = run(SimdTier::Scalar);
+            let (gw_v, ght_v, ll_v) = run(SimdTier::Avx2Fma);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&gw_s), bits(&gw_v), "gw K={k} nonneg={nonneg}");
+            assert_eq!(bits(&ght_s), bits(&ght_v), "ght K={k} nonneg={nonneg}");
+            assert_eq!(ll_s.to_bits(), ll_v.to_bits(), "ll K={k} nonneg={nonneg}");
+        }
+    }
+}
+
+fn run_sparse_chain(tier: SimdTier, threads: usize) -> (Vec<u32>, Vec<u32>) {
+    set_tier_override(Some(tier));
+    let csr = movielens::movielens_like_dims(40, 50, 600, 4, 9);
+    let model = NmfModel::poisson(4).with_priors(2.0, 2.0);
+    let run = RunConfig::quick(40).with_step(StepSchedule::Polynomial { a: 0.01, b: 0.51 });
+    let mut s = Psgld::new_sparse(&csr, &model, 4, run, 31)
+        .unwrap()
+        .with_threads(threads)
+        .with_exec_mode(ExecMode::Pool);
+    for t in 1..=40 {
+        s.step(t);
+    }
+    let st = s.state();
+    (
+        st.w.as_slice().iter().map(|x| x.to_bits()).collect(),
+        st.ht.as_slice().iter().map(|x| x.to_bits()).collect(),
+    )
+}
+
+/// The acceptance pin: a sparse PSGLD chain is bitwise identical across
+/// {scalar, SIMD} x {1, 2, default} workers. The (seed, t, block)-keyed
+/// RNG streams make worker count irrelevant; the canonical arithmetic
+/// order makes the tier irrelevant.
+#[test]
+fn sparse_chain_bitwise_identical_across_tiers_and_workers() {
+    let _g = TierGuard::acquire();
+    let mut tiers = vec![SimdTier::Scalar];
+    if avx2_available() {
+        tiers.push(SimdTier::Avx2Fma);
+    } else {
+        eprintln!("AVX2+FMA unavailable: pinning worker counts at the scalar tier only");
+    }
+    let reference = run_sparse_chain(SimdTier::Scalar, 1);
+    for &tier in &tiers {
+        for threads in [1, 2, default_threads()] {
+            let got = run_sparse_chain(tier, threads);
+            assert_eq!(
+                reference, got,
+                "chain diverged at tier={tier:?} threads={threads}"
+            );
+        }
+    }
+}
+
+/// The batched noise slab consumes the RNG stream exactly like the old
+/// per-element draw: `sgld_apply_core` equals a hand-rolled loop that
+/// draws one ziggurat normal per element, across stripe boundaries and
+/// for both mirror settings.
+#[test]
+fn batched_noise_matches_per_element_draws_bitwise() {
+    for mirror in [false, true] {
+        // spans two full stripes plus a ragged tail
+        let n = 2 * psgld::kernels::native::NOISE_STRIPE + 123;
+        let mut rng_a = Rng::seed_from(99);
+        let mut rng_b = Rng::seed_from(99);
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let x0: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let (eps, scale, lam) = (0.01f32, 1.5f32, 0.3f32);
+        let sd = (2.0 * eps).sqrt();
+
+        let mut x_batched = x0.clone();
+        let mut scratch = ScratchArena::new();
+        sgld_apply_core(&mut x_batched, &g, eps, scale, lam, mirror, &mut rng_a, &mut scratch);
+
+        let mut x_ref = x0;
+        for i in 0..n {
+            let noise = normal_ziggurat(&mut rng_b) as f32;
+            let next = x_ref[i] + eps * (scale * g[i] - lam * sign0(x_ref[i])) + noise * sd;
+            x_ref[i] = if mirror { next.abs() } else { next };
+        }
+
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&x_batched), bits(&x_ref), "mirror={mirror}");
+        // and the two RNGs are in the same stream position afterwards
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "mirror={mirror}");
+    }
+}
+
+/// `nonneg_hint` is the once-per-part decision both the shared-memory
+/// sampler and the cluster simulator use; pin its semantics.
+#[test]
+fn nonneg_hint_semantics() {
+    let pos = vec![0.5f32; 8];
+    let neg = vec![-0.5f32; 8];
+    // mirror forces the hint regardless of data
+    assert!(nonneg_hint(true, &neg, &neg, 0));
+    // auto-detect needs nnz to dominate the factor sizes AND all-nonneg
+    assert!(nonneg_hint(false, &pos, &pos, 17));
+    assert!(!nonneg_hint(false, &pos, &pos, 16));
+    assert!(!nonneg_hint(false, &pos, &neg, 17));
+}
