@@ -1,0 +1,182 @@
+//! Robustness sweep for the asynchronous fault-injecting cluster
+//! executor: virtual-time throughput and held-out log-likelihood across
+//! crash rate × staleness bound `tau`, written to `BENCH_fault.json`.
+//!
+//! The `tau = 0` / no-fault cell is asserted bitwise-equal to the
+//! synchronous simulator before anything is reported — the sweep is
+//! meaningless if the baseline drifts.
+//!
+//! Run: `cargo bench --bench fault_sweep` (full grid)
+//!      `cargo bench --bench fault_sweep -- --smoke` (tiny CI grid)
+
+mod bench_util;
+use bench_util::header;
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use psgld::cluster::{
+    psgld_distributed_async, psgld_distributed_full, ComputeModel, FaultPlan, FaultRates,
+    NetworkModel, TieBreak,
+};
+use psgld::config::{AsyncClusterConfig, RunConfig, StepSchedule};
+use psgld::data::movielens;
+use psgld::data::sparse::Csr;
+use psgld::metrics::loglik_sparse;
+use psgld::model::NmfModel;
+
+/// Deterministic ~10% holdout split by entry index.
+fn split_holdout(csr: &Csr) -> (Csr, Csr) {
+    let rows = csr.rows();
+    let cols = csr.cols();
+    let mut train: Vec<(u32, u32, f32)> = Vec::new();
+    let mut held: Vec<(u32, u32, f32)> = Vec::new();
+    let mut idx = 0u64;
+    for i in 0..rows {
+        for (j, val) in csr.row(i) {
+            if idx % 10 == 3 {
+                held.push((i as u32, j, val));
+            } else {
+                train.push((i as u32, j, val));
+            }
+            idx += 1;
+        }
+    }
+    (
+        Csr::from_triplets(rows, cols, &mut train).expect("train split"),
+        Csr::from_triplets(rows, cols, &mut held).expect("holdout split"),
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = 4usize;
+    let (t_total, taus, crash_rates): (u64, Vec<u64>, Vec<f64>) = if smoke {
+        (40, vec![0, 4], vec![0.0, 0.02])
+    } else {
+        (200, vec![0, 1, 4, 8], vec![0.0, 0.005, 0.02, 0.05])
+    };
+
+    let csr = movielens::movielens_like_dims(64, 80, 1600, 4, 21);
+    let (train, held) = split_holdout(&csr);
+    let model = NmfModel::poisson(4).with_priors(2.0, 2.0);
+    let run = RunConfig::quick(t_total).with_step(StepSchedule::Polynomial { a: 0.01, b: 0.51 });
+    let net = NetworkModel::paper_cluster();
+    let compute = ComputeModel::paper_node();
+    let seed = 4242u64;
+
+    // --- baseline contract: tau=0 + no faults == synchronous, bitwise
+    let sync = psgld_distributed_full(&train, &model, b, &run, seed, &net, &compute, |_| 0.0)
+        .expect("sync baseline");
+    let base_cfg = AsyncClusterConfig::default().with_checkpoint_every(t_total / 4);
+    let base = psgld_distributed_async(
+        &train,
+        &model,
+        b,
+        &run,
+        seed,
+        &net,
+        &compute,
+        &base_cfg,
+        &FaultPlan::empty(),
+        TieBreak::Fifo,
+        |_| 0.0,
+    )
+    .expect("async baseline");
+    let sync_state = sync.state.expect("full fidelity keeps state");
+    assert_eq!(
+        base.state.w, sync_state.w,
+        "tau=0/no-fault async W drifted from the synchronous simulator"
+    );
+    assert_eq!(
+        base.state.ht, sync_state.ht,
+        "tau=0/no-fault async H drifted from the synchronous simulator"
+    );
+    println!("baseline check: tau=0/no-fault async == synchronous (bitwise) ✓");
+
+    header(&format!(
+        "fault sweep (B={b}, T={t_total}, {} train / {} holdout nnz{})",
+        train.nnz(),
+        held.nnz(),
+        if smoke { ", --smoke" } else { "" }
+    ));
+    println!(
+        "{:>5} {:>11} {:>12} {:>14} {:>16} {:>10} {:>9} {:>12}",
+        "tau", "crash_rate", "virt_sec", "iters/vsec", "holdout_loglik", "recov", "max_stale",
+        "stall_sec"
+    );
+
+    let mut rows: Vec<String> = Vec::new();
+    for &tau in &taus {
+        for &rate in &crash_rates {
+            let plan = if rate == 0.0 {
+                FaultPlan::empty()
+            } else {
+                let rates = FaultRates {
+                    crash_prob: rate,
+                    straggler_prob: 0.02,
+                    drop_prob: 0.01,
+                    delay_prob: 0.02,
+                    ..Default::default()
+                };
+                FaultPlan::seeded(seed ^ tau ^ (rate * 1e4) as u64, b, t_total, &rates)
+            };
+            let cfg = AsyncClusterConfig::default()
+                .with_tau(tau)
+                .with_checkpoint_every((t_total / 8).max(1));
+            let rep = match psgld_distributed_async(
+                &train,
+                &model,
+                b,
+                &run,
+                seed,
+                &net,
+                &compute,
+                &cfg,
+                &plan,
+                TieBreak::Fifo,
+                |_| 0.0,
+            ) {
+                Ok(r) => r,
+                Err(e) => {
+                    println!("{tau:>5} {rate:>11.3}  failed: {e}");
+                    continue;
+                }
+            };
+            let ll = loglik_sparse(&rep.state.w, &rep.state.h(), &held, model.beta, model.phi);
+            let throughput = rep.iterations as f64 / rep.virtual_seconds.max(1e-12);
+            println!(
+                "{tau:>5} {rate:>11.3} {:>12.4} {:>14.1} {:>16.2} {:>10} {:>9} {:>12.4}",
+                rep.virtual_seconds,
+                throughput,
+                ll,
+                rep.recoveries,
+                rep.ledger.max_staleness(),
+                rep.stall_seconds
+            );
+            rows.push(format!(
+                "{{\"tau\":{tau},\"crash_rate\":{rate},\"virtual_seconds\":{:.6},\
+                 \"iters_per_vsec\":{throughput:.3},\"holdout_loglik\":{ll:.4},\
+                 \"recoveries\":{},\"checkpoints\":{},\"max_staleness\":{},\
+                 \"stale_fraction\":{:.4},\"stall_seconds\":{:.6},\
+                 \"messages_dropped\":{},\"retries\":{},\"executed_iterations\":{}}}",
+                rep.virtual_seconds,
+                rep.recoveries,
+                rep.checkpoints_taken,
+                rep.ledger.max_staleness(),
+                rep.ledger.stale_fraction(),
+                rep.stall_seconds,
+                rep.messages_dropped,
+                rep.retries,
+                rep.executed_iterations,
+            ));
+        }
+    }
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_fault.json");
+    let body = format!("[\n  {}\n]\n", rows.join(",\n  "));
+    match std::fs::File::create(&path).and_then(|mut f| f.write_all(body.as_bytes())) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
+}

@@ -1,0 +1,717 @@
+//! Event-driven asynchronous PSGLD executor with fault injection.
+//!
+//! Each of the `B` logical nodes advances independently through the
+//! iterations, blocked only by the bounded-staleness rule: node `i` may
+//! start iteration `t` as soon as its cached copy of the `H` stripe it
+//! needs (`perm_t[i]`) is at most `tau` iterations stale; past the
+//! bound it stalls until the ring hand-off arrives. A [`FaultPlan`]
+//! injects straggler slowdowns, crashes (with coordinated rollback to
+//! the last consistent checkpoint) and ring-message drops/delays, all
+//! keyed by logical coordinates so every run replays exactly.
+//!
+//! ## Determinism
+//!
+//! The chain is a function of `(seed, tau, plan)` only:
+//!
+//! * parts come from the stateless [`part_at_iter`] fed by
+//!   `Rng::derive(seed, [t, 0xcafe])` — the same stream the synchronous
+//!   simulator consumes;
+//! * per-block noise comes from `Rng::derive(seed, [t, block])` inside
+//!   the shared [`sparse_block_langevin`] body;
+//! * event-queue tie-breaking ([`TieBreak`]) orders simultaneous events
+//!   but can never touch the chain — pinned by `tests/fault_injection.rs`.
+//!
+//! With `tau = 0` and an empty plan every node consumes exactly-fresh
+//! stripes, so the executed updates are identical to the synchronous
+//! simulator's and the chain is bitwise equal (also asserted in tests).
+//!
+//! ## Consistent snapshots without barriers
+//!
+//! Updates apply at iteration *start*; the [`Slot`] for iteration `t`
+//! collects each node's updated `W`/`H` stripes as they execute and
+//! completes when all `B` nodes have *finished* `t`. Completed slots
+//! are exact global states — they feed the monitor trace, periodic
+//! checkpoints (through [`Checkpoint`]), and crash recovery.
+
+use std::collections::{BTreeMap, HashSet};
+use std::path::{Path, PathBuf};
+
+use crate::config::{AsyncClusterConfig, RunConfig};
+use crate::coordinator::Checkpoint;
+use crate::data::sparse::{BlockedSparse, Csr};
+use crate::linalg::Mat;
+use crate::metrics::{NodeStats, Trace};
+use crate::model::NmfModel;
+use crate::partition::{part_at_iter, GridPartition, Part};
+use crate::rng::Rng;
+use crate::samplers::{sparse_block_langevin, FactorState};
+use crate::util::parallel::ScratchArena;
+use crate::{Error, Result};
+
+use super::event::{EventKind, EventQueue, Msg, TieBreak};
+use super::fault::FaultPlan;
+use super::staleness::StalenessLedger;
+use super::{ComputeModel, NetworkModel};
+
+/// Result of an asynchronous fault-injected run.
+#[derive(Clone, Debug)]
+pub struct AsyncSimReport {
+    /// Virtual time at which the last node finished.
+    pub virtual_seconds: f64,
+    /// Summed per-node compute time (stragglers included).
+    pub busy_seconds: f64,
+    /// Summed per-node time blocked on the staleness bound.
+    pub stall_seconds: f64,
+    /// Chain length delivered (`run.t_total`).
+    pub iterations: u64,
+    /// Block updates actually executed, re-execution after rollback
+    /// included (`>= iterations * B` when crashes occurred).
+    pub executed_iterations: u64,
+    /// Crash→rollback→restart cycles.
+    pub recoveries: u64,
+    /// Consistent checkpoints taken.
+    pub checkpoints_taken: u64,
+    /// Ring messages produced (logical sends, not attempts).
+    pub messages_sent: u64,
+    /// Transmission attempts the network dropped.
+    pub messages_dropped: u64,
+    /// Retransmissions after timeouts.
+    pub retries: u64,
+    /// Monitor trace (virtual-time x-axis, per-node counters attached).
+    pub trace: Trace,
+    /// Final factor state (the consistent iteration-`t_total` snapshot).
+    pub state: FactorState,
+    /// Full staleness log of the surviving (post-rollback) chain.
+    pub ledger: StalenessLedger,
+}
+
+/// A node's cached copy of one `H` column-stripe.
+#[derive(Clone, Debug)]
+struct CacheEntry {
+    /// Iteration the content reflects (monotone).
+    version: u64,
+    /// `cols × K`, row-major.
+    data: Vec<f32>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Stall {
+    since: f64,
+    block: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct NodeRt {
+    /// Next iteration this node will start (1-based).
+    next_t: u64,
+    done: bool,
+    stalled: Option<Stall>,
+}
+
+/// In-flight consistent snapshot of one iteration.
+struct Slot {
+    w: Mat,
+    ht: Mat,
+    finished: Vec<bool>,
+    finished_count: usize,
+    /// Virtual time the slowest contributor finished.
+    time: f64,
+}
+
+impl Slot {
+    fn new(rows: usize, cols: usize, k: usize, b: usize) -> Self {
+        Slot {
+            w: Mat::zeros(rows, k),
+            ht: Mat::zeros(cols, k),
+            finished: vec![false; b],
+            finished_count: 0,
+            time: 0.0,
+        }
+    }
+}
+
+struct AsyncSim<'a> {
+    model: &'a NmfModel,
+    run: &'a RunConfig,
+    cfg: &'a AsyncClusterConfig,
+    plan: &'a FaultPlan,
+    net: &'a NetworkModel,
+    compute: &'a ComputeModel,
+    blocked: BlockedSparse,
+    grid: GridPartition,
+    seed: u64,
+    b: usize,
+    k: usize,
+    queue: EventQueue,
+    nodes: Vec<NodeRt>,
+    /// `cache[node][stripe]` — each node's view of every `H` stripe.
+    cache: Vec<Vec<CacheEntry>>,
+    /// Global `W` (stripe `i` written only by node `i`).
+    w: Mat,
+    /// Per-node gradient accumulators.
+    scratch: Vec<(Vec<f32>, Vec<f32>)>,
+    arena: ScratchArena,
+    part_buf: Part,
+    slots: BTreeMap<u64, Slot>,
+    trace: Trace,
+    ledger: StalenessLedger,
+    /// Last consistent checkpoint (iteration, state); iteration 0 is the
+    /// prior draw.
+    last_ckpt: (u64, FactorState),
+    ckpt_path: Option<PathBuf>,
+    ckpt_on_disk: bool,
+    /// Crash rules that already fired (each fires once).
+    consumed_crashes: HashSet<(usize, u64)>,
+    stats: Vec<NodeStats>,
+    done_count: usize,
+    now: f64,
+    busy_s: f64,
+    final_state: Option<FactorState>,
+    checkpoints_taken: u64,
+    recoveries: u64,
+    executed: u64,
+}
+
+impl AsyncSim<'_> {
+    /// Overwrite `part_buf` with the part of iteration `t`.
+    fn set_part(&mut self, t: u64) {
+        let mut rng = Rng::derive(self.seed, &[t, 0xcafe]);
+        part_at_iter(self.run.schedule, self.b, t, &mut rng, &mut self.part_buf);
+    }
+
+    /// Start node `i`'s next iteration if the staleness bound allows it;
+    /// stall otherwise. Fires pending crash rules first.
+    fn try_start(&mut self, i: usize) -> Result<()> {
+        if self.nodes[i].done || self.nodes[i].stalled.is_some() {
+            return Ok(());
+        }
+        let t = self.nodes[i].next_t;
+        if t > self.run.t_total {
+            self.nodes[i].done = true;
+            self.done_count += 1;
+            return Ok(());
+        }
+        if self.plan.crash_at(i, t) && self.consumed_crashes.insert((i, t)) {
+            return self.rollback(i);
+        }
+        self.set_part(t);
+        let j = self.part_buf.perm[i];
+        let staleness = (t - 1).saturating_sub(self.cache[i][j].version);
+        if staleness > self.cfg.tau {
+            self.nodes[i].stalled = Some(Stall { since: self.now, block: j });
+            self.stats[i].stalls += 1;
+            return Ok(());
+        }
+        self.ledger.record(i, t, staleness)?;
+        self.exec_update(i, t, j);
+        Ok(())
+    }
+
+    /// Apply node `i`'s block update for iteration `t` (stripe pair
+    /// `(i, j)`), capture the result into iteration `t`'s slot, and
+    /// schedule the compute-phase finish.
+    fn exec_update(&mut self, i: usize, t: u64, j: usize) {
+        let k = self.k;
+        let rows = self.grid.row_range(i);
+        let cols = self.grid.col_range(j);
+        let (m, n) = (rows.len(), cols.len());
+        let eps = self.run.step.eps(t) as f32;
+        let scale = self.blocked.scale(&self.part_buf);
+        // An async node has no consistent global state to rescan, so the
+        // sparse nonneg fast path is decided by the mirror flag alone
+        // (for mirror models this matches the synchronous executors'
+        // nonneg_hint exactly — the bitwise-equality tests rely on it).
+        let nonneg = self.model.mirror;
+        let (rows_total, cols_total, b) = (self.grid.rows(), self.grid.cols(), self.b);
+
+        let w_slice = &mut self.w.as_mut_slice()[rows.start * k..rows.end * k];
+        let entry = &mut self.cache[i][j];
+        let sb = &mut self.scratch[i];
+        sparse_block_langevin(
+            w_slice,
+            &mut entry.data,
+            k,
+            self.blocked.block(i, j),
+            self.model,
+            nonneg,
+            eps,
+            scale,
+            self.seed,
+            t,
+            i as u64,
+            &mut sb.0[..m * k],
+            &mut sb.1[..n * k],
+            &mut self.arena,
+        );
+        // Monotone even if a future version lapped us while stalled.
+        entry.version = entry.version.max(t - 1) + 1;
+
+        let slot = self
+            .slots
+            .entry(t)
+            .or_insert_with(|| Slot::new(rows_total, cols_total, k, b));
+        slot.w.as_mut_slice()[rows.start * k..rows.end * k].copy_from_slice(w_slice);
+        slot.ht.as_mut_slice()[cols.start * k..cols.end * k].copy_from_slice(&entry.data);
+
+        self.executed += 1;
+        self.stats[i].iterations += 1;
+        let base = self
+            .compute
+            .block_time_s(self.blocked.block(i, j).nnz(), (m + n) * k);
+        let dur = base * self.plan.slowdown(i, t);
+        self.busy_s += dur;
+        self.queue.push(self.now + dur, EventKind::NodeFinish { node: i, t });
+    }
+
+    /// Node `i` finished the compute phase of iteration `t`: complete
+    /// the slot bookkeeping, hand the updated stripe to its next
+    /// consumer, and move on.
+    fn on_finish(
+        &mut self,
+        i: usize,
+        t: u64,
+        monitor: &mut dyn FnMut(&FactorState) -> f64,
+    ) -> Result<()> {
+        if let Some(slot) = self.slots.get_mut(&t) {
+            if !slot.finished[i] {
+                slot.finished[i] = true;
+                slot.finished_count += 1;
+                slot.time = slot.time.max(self.now);
+            }
+        }
+        self.finalize_ready_slots(monitor)?;
+
+        self.set_part(t);
+        let j = self.part_buf.perm[i];
+        if t < self.run.t_total {
+            // the node that consumes stripe j at t+1 (ring neighbour
+            // under the cyclic schedule)
+            self.set_part(t + 1);
+            let nb = self
+                .part_buf
+                .perm
+                .iter()
+                .position(|&x| x == j)
+                .expect("part perm is a bijection");
+            if nb != i {
+                let entry = &self.cache[i][j];
+                let msg = Msg {
+                    from: i,
+                    to: nb,
+                    block: j,
+                    version: entry.version,
+                    produced_at: t,
+                    attempt: 0,
+                    data: entry.data.clone(),
+                };
+                self.stats[i].msgs_sent += 1;
+                self.send(msg)?;
+            }
+        }
+        self.nodes[i].next_t = t + 1;
+        self.try_start(i)
+    }
+
+    /// Transmit (or drop-and-arm-retry) a ring message at `self.now`.
+    fn send(&mut self, mut msg: Msg) -> Result<()> {
+        let drops = self.plan.drop_count(msg.from, msg.produced_at);
+        if msg.attempt < drops {
+            self.stats[msg.from].msgs_dropped += 1;
+            if msg.attempt >= self.cfg.max_retries {
+                return Err(Error::Runtime(format!(
+                    "ring message from node {} (iteration {}) was dropped {} times, \
+                     exceeding max_retries={}; failing loudly instead of hanging the \
+                     event loop — raise max_retries or fix the FaultPlan",
+                    msg.from,
+                    msg.produced_at,
+                    msg.attempt + 1,
+                    self.cfg.max_retries
+                )));
+            }
+            let backoff = self.cfg.msg_timeout_s * self.cfg.retry_backoff.powi(msg.attempt as i32);
+            msg.attempt += 1;
+            self.queue.push(self.now + backoff, EventKind::RetryTimer(msg));
+            return Ok(());
+        }
+        let bytes = msg.data.len() * std::mem::size_of::<f32>();
+        let latency = self.net.ring_exchange_s(self.b, bytes)
+            + self.plan.extra_delay(msg.from, msg.produced_at);
+        self.queue.push(self.now + latency, EventKind::MsgArrive(msg));
+        Ok(())
+    }
+
+    /// Deliver a ring message: version-checked cache replace, then wake
+    /// the receiver if it was stalled on this stripe.
+    fn on_msg(&mut self, msg: Msg) -> Result<()> {
+        let entry = &mut self.cache[msg.to][msg.block];
+        if msg.version > entry.version {
+            entry.version = msg.version;
+            entry.data.clear();
+            entry.data.extend_from_slice(&msg.data);
+        }
+        if let Some(st) = self.nodes[msg.to].stalled {
+            if st.block == msg.block {
+                let t = self.nodes[msg.to].next_t;
+                let staleness = (t - 1).saturating_sub(self.cache[msg.to][msg.block].version);
+                if staleness <= self.cfg.tau {
+                    self.stats[msg.to].stall_seconds += self.now - st.since;
+                    self.nodes[msg.to].stalled = None;
+                    self.try_start(msg.to)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Coordinated crash recovery: every node rolls back to the last
+    /// consistent checkpoint `c`, in-flight work is discarded, and the
+    /// cluster restarts at `c + 1` after `restart_delay_s`.
+    fn rollback(&mut self, crashed: usize) -> Result<()> {
+        self.recoveries += 1;
+        self.stats[crashed].recoveries += 1;
+        // Restore through the on-disk path when one exists (exercising
+        // Checkpoint::load), else from the in-memory snapshot.
+        let (c, state) = if self.ckpt_on_disk {
+            let path = self.ckpt_path.as_ref().expect("ckpt_on_disk implies a path");
+            let ck = Checkpoint::load(path)?;
+            (ck.iteration, ck.state)
+        } else {
+            (self.last_ckpt.0, self.last_ckpt.1.clone())
+        };
+        self.queue.clear();
+        self.slots.clear();
+        self.ledger.truncate_after(c);
+        while self.trace.iters.last().is_some_and(|&it| it > c) {
+            self.trace.iters.pop();
+            self.trace.seconds.pop();
+            self.trace.values.pop();
+        }
+        self.w = state.w.clone();
+        let k = self.k;
+        let b = self.b;
+        for row in &mut self.cache {
+            for j in 0..b {
+                let cols = self.grid.col_range(j);
+                let entry = &mut row[j];
+                entry.version = c;
+                entry.data.clear();
+                entry
+                    .data
+                    .extend_from_slice(&state.ht.as_slice()[cols.start * k..cols.end * k]);
+            }
+        }
+        for node in &mut self.nodes {
+            if node.done {
+                self.done_count -= 1;
+            }
+            *node = NodeRt { next_t: c + 1, done: false, stalled: None };
+        }
+        self.queue
+            .push(self.now + self.cfg.restart_delay_s, EventKind::RestartDone);
+        Ok(())
+    }
+
+    /// All nodes are back up after a rollback: start them. If one of
+    /// the restarts immediately crashes again (a crash rule at `c + 1`),
+    /// the rollback has already reset everything — stop fanning out.
+    fn on_restart(&mut self) -> Result<()> {
+        let rec = self.recoveries;
+        for i in 0..self.b {
+            self.try_start(i)?;
+            if self.recoveries != rec {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Finalize completed iteration snapshots in order: monitor trace,
+    /// periodic checkpoints, final state. Completion is monotone in `t`
+    /// (slot `t+1` cannot complete before slot `t`), so draining from
+    /// the front of the map is exact.
+    fn finalize_ready_slots(
+        &mut self,
+        monitor: &mut dyn FnMut(&FactorState) -> f64,
+    ) -> Result<()> {
+        loop {
+            let ready = match self.slots.iter().next() {
+                Some((&t, slot)) if slot.finished_count == self.b => t,
+                _ => return Ok(()),
+            };
+            let slot = self.slots.remove(&ready).expect("slot present");
+            let t = ready;
+            let state = FactorState { w: slot.w, ht: slot.ht };
+            if t % self.run.monitor_every == 0 || t == self.run.t_total {
+                self.trace.push(t, slot.time, monitor(&state));
+            }
+            if self.cfg.checkpoint_every > 0 && t % self.cfg.checkpoint_every == 0 {
+                if let Some(path) = &self.ckpt_path {
+                    Checkpoint::new(t, self.seed, &state).save(path)?;
+                    self.ckpt_on_disk = true;
+                }
+                self.last_ckpt = (t, state.clone());
+                self.checkpoints_taken += 1;
+            }
+            if t == self.run.t_total {
+                self.final_state = Some(state);
+            }
+        }
+    }
+}
+
+/// Asynchronous distributed PSGLD over a sparse matrix with bounded
+/// staleness and fault injection. With `cfg.tau == 0` and an empty
+/// `plan`, the chain is bitwise identical to
+/// [`super::psgld_distributed_full`] for mirror models.
+#[allow(clippy::too_many_arguments)]
+pub fn psgld_distributed_async(
+    v: &Csr,
+    model: &NmfModel,
+    b: usize,
+    run: &RunConfig,
+    seed: u64,
+    net: &NetworkModel,
+    compute: &ComputeModel,
+    cfg: &AsyncClusterConfig,
+    plan: &FaultPlan,
+    tie: TieBreak,
+    mut monitor: impl FnMut(&FactorState) -> f64,
+) -> Result<AsyncSimReport> {
+    run.validate()?;
+    cfg.validate()?;
+    plan.validate(b)?;
+    let blocked = BlockedSparse::from_csr(v, b)?;
+    let grid = blocked.grid().clone();
+    let k = model.k;
+
+    // Same init stream as every other executor.
+    let mut rng = Rng::derive(seed, &[0x9516_1d]);
+    let init = FactorState::from_prior(model, grid.rows(), grid.cols(), &mut rng);
+
+    let cache: Vec<Vec<CacheEntry>> = (0..b)
+        .map(|_| {
+            (0..b)
+                .map(|j| {
+                    let cols = grid.col_range(j);
+                    CacheEntry {
+                        version: 0,
+                        data: init.ht.as_slice()[cols.start * k..cols.end * k].to_vec(),
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let max_n = (0..b).map(|bj| grid.col_range(bj).len()).max().unwrap_or(0);
+    let scratch: Vec<(Vec<f32>, Vec<f32>)> = (0..b)
+        .map(|bi| (vec![0f32; grid.row_range(bi).len() * k], vec![0f32; max_n * k]))
+        .collect();
+    let ckpt_path = cfg
+        .checkpoint_dir
+        .as_ref()
+        .map(|d| Checkpoint::latest_path(Path::new(d)));
+
+    let mut trace = Trace::new("psgld_async");
+    trace.push(0, 0.0, monitor(&init));
+
+    let mut sim = AsyncSim {
+        model,
+        run,
+        cfg,
+        plan,
+        net,
+        compute,
+        blocked,
+        grid,
+        seed,
+        b,
+        k,
+        queue: EventQueue::new(tie),
+        nodes: vec![NodeRt { next_t: 1, done: false, stalled: None }; b],
+        cache,
+        w: init.w.clone(),
+        scratch,
+        arena: ScratchArena::new(),
+        part_buf: Part::identity(b),
+        slots: BTreeMap::new(),
+        trace,
+        ledger: StalenessLedger::new(cfg.tau),
+        last_ckpt: (0, init),
+        ckpt_path,
+        ckpt_on_disk: false,
+        consumed_crashes: HashSet::new(),
+        stats: (0..b)
+            .map(|node| NodeStats { node, ..Default::default() })
+            .collect(),
+        done_count: 0,
+        now: 0.0,
+        busy_s: 0.0,
+        final_state: None,
+        checkpoints_taken: 0,
+        recoveries: 0,
+        executed: 0,
+    };
+
+    // Kick off every node (guarding against an immediate crash rule at
+    // t = 1 resetting the cluster mid-fan-out).
+    let rec = sim.recoveries;
+    for i in 0..b {
+        sim.try_start(i)?;
+        if sim.recoveries != rec {
+            break;
+        }
+    }
+
+    // Generous livelock backstop: a healthy run fires O(B) events per
+    // iteration; crashes re-execute at most the checkpoint interval.
+    let budget = 10_000 + 200 * b as u64 * run.t_total.max(1);
+    let mut events = 0u64;
+    while sim.done_count < sim.b {
+        let (time, kind) = sim.queue.pop().ok_or_else(|| {
+            Error::Runtime(
+                "async simulator deadlocked: event queue drained with unfinished nodes \
+                 (a node is stalled past tau with no message in flight) — check the \
+                 FaultPlan and tau"
+                    .into(),
+            )
+        })?;
+        sim.now = sim.now.max(time);
+        events += 1;
+        if events > budget {
+            return Err(Error::Runtime(format!(
+                "async simulator exceeded its event budget ({budget}); likely a \
+                 retry/crash livelock — check the FaultPlan"
+            )));
+        }
+        match kind {
+            EventKind::NodeFinish { node, t } => sim.on_finish(node, t, &mut monitor)?,
+            EventKind::MsgArrive(msg) => sim.on_msg(msg)?,
+            EventKind::RetryTimer(msg) => {
+                sim.stats[msg.from].retries += 1;
+                sim.send(msg)?;
+            }
+            EventKind::RestartDone => sim.on_restart()?,
+        }
+    }
+
+    let state = sim.final_state.take().ok_or_else(|| {
+        Error::Runtime("async simulator finished without a final snapshot — executor bug".into())
+    })?;
+    for (node, (mx, mean, _)) in sim.ledger.per_node(b).into_iter().enumerate() {
+        sim.stats[node].max_staleness = mx;
+        sim.stats[node].mean_staleness = mean;
+    }
+    let stall_seconds: f64 = sim.stats.iter().map(|s| s.stall_seconds).sum();
+    let messages_sent: u64 = sim.stats.iter().map(|s| s.msgs_sent).sum();
+    let messages_dropped: u64 = sim.stats.iter().map(|s| s.msgs_dropped).sum();
+    let retries: u64 = sim.stats.iter().map(|s| s.retries).sum();
+    sim.trace.node_stats = sim.stats;
+
+    Ok(AsyncSimReport {
+        virtual_seconds: sim.now,
+        busy_seconds: sim.busy_s,
+        stall_seconds,
+        iterations: run.t_total,
+        executed_iterations: sim.executed,
+        recoveries: sim.recoveries,
+        checkpoints_taken: sim.checkpoints_taken,
+        messages_sent,
+        messages_dropped,
+        retries,
+        trace: sim.trace,
+        state,
+        ledger: sim.ledger,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StepSchedule;
+    use crate::data::movielens;
+
+    fn quick_setup() -> (Csr, NmfModel, RunConfig) {
+        let csr = movielens::movielens_like_dims(32, 40, 400, 3, 7);
+        let model = NmfModel::poisson(3).with_priors(2.0, 2.0);
+        let run = RunConfig::quick(24).with_step(StepSchedule::Polynomial { a: 0.01, b: 0.51 });
+        (csr, model, run)
+    }
+
+    #[test]
+    fn healthy_async_run_completes() {
+        let (csr, model, run) = quick_setup();
+        let rep = psgld_distributed_async(
+            &csr,
+            &model,
+            4,
+            &run,
+            11,
+            &NetworkModel::paper_cluster(),
+            &ComputeModel::paper_node(),
+            &AsyncClusterConfig::default(),
+            &FaultPlan::empty(),
+            TieBreak::Fifo,
+            |_| 0.0,
+        )
+        .unwrap();
+        assert_eq!(rep.iterations, 24);
+        assert_eq!(rep.executed_iterations, 24 * 4);
+        assert_eq!(rep.recoveries, 0);
+        assert_eq!(rep.messages_dropped, 0);
+        assert!(rep.virtual_seconds > 0.0);
+        assert!(rep.state.w.as_slice().iter().all(|x| x.is_finite()));
+        // tau=0: every consumed block was exactly fresh
+        assert_eq!(rep.ledger.max_staleness(), 0);
+        assert_eq!(rep.trace.node_stats.len(), 4);
+    }
+
+    #[test]
+    fn invalid_plan_rejected_before_the_loop() {
+        let (csr, model, run) = quick_setup();
+        let plan = FaultPlan {
+            crashes: vec![super::super::fault::CrashRule { node: 99, at_t: 1 }],
+            ..Default::default()
+        };
+        let err = psgld_distributed_async(
+            &csr,
+            &model,
+            4,
+            &run,
+            11,
+            &NetworkModel::paper_cluster(),
+            &ComputeModel::paper_node(),
+            &AsyncClusterConfig::default(),
+            &plan,
+            TieBreak::Fifo,
+            |_| 0.0,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("node 99"));
+    }
+
+    #[test]
+    fn permanent_drop_fails_loudly_not_hangs() {
+        let (csr, model, run) = quick_setup();
+        let cfg = AsyncClusterConfig { max_retries: 2, ..Default::default() };
+        // drop far more times than max_retries allows
+        let plan = FaultPlan {
+            drops: vec![super::super::fault::DropRule { from: 0, produced_at: 1, count: 50 }],
+            ..Default::default()
+        };
+        let err = psgld_distributed_async(
+            &csr,
+            &model,
+            4,
+            &run,
+            11,
+            &NetworkModel::paper_cluster(),
+            &ComputeModel::paper_node(),
+            &cfg,
+            &plan,
+            TieBreak::Fifo,
+            |_| 0.0,
+        )
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("max_retries"), "{msg}");
+    }
+}

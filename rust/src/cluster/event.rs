@@ -1,0 +1,242 @@
+//! Discrete-event machinery for the asynchronous cluster simulator:
+//! typed events, a virtual-time priority queue, and pluggable
+//! tie-breaking.
+//!
+//! Virtual time is an `f64` of seconds. Events at equal times are
+//! ordered by a [`TieBreak`] policy and then by insertion sequence; the
+//! determinism tests permute the policy to prove the *chain* never
+//! depends on pop order among ties (only per-`(seed, t, block)` RNG
+//! streams touch the chain).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::rng::splitmix64;
+
+/// A ring hand-off in flight: node `from` produced column-stripe
+/// `block` of `H` at iteration `produced_at` and sends it to the node
+/// that consumes the stripe next.
+#[derive(Clone, Debug)]
+pub struct Msg {
+    pub from: usize,
+    pub to: usize,
+    /// Column-stripe index `0..B`.
+    pub block: usize,
+    /// Chain version the payload reflects (monotone per stripe).
+    pub version: u64,
+    /// Iteration at which the payload was produced; fault rules for
+    /// drops/delays are keyed on `(from, produced_at)`.
+    pub produced_at: u64,
+    /// Transmission attempt, 0-based; bumped on every retry.
+    pub attempt: u32,
+    /// The stripe content (`cols × K`, row-major).
+    pub data: Vec<f32>,
+}
+
+/// What happens when an event fires.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// Node `node` finishes the compute phase of iteration `t`.
+    NodeFinish { node: usize, t: u64 },
+    /// A ring message reaches its destination.
+    MsgArrive(Msg),
+    /// A sender's retransmission timer expires.
+    RetryTimer(Msg),
+    /// A crashed-and-rolled-back cluster comes back up.
+    RestartDone,
+}
+
+impl EventKind {
+    /// The node an event concerns (destination for messages); feeds the
+    /// tie-break key only, never the chain.
+    fn node(&self) -> usize {
+        match self {
+            EventKind::NodeFinish { node, .. } => *node,
+            EventKind::MsgArrive(m) | EventKind::RetryTimer(m) => m.to,
+            EventKind::RestartDone => 0,
+        }
+    }
+}
+
+/// Order of events that share an identical virtual timestamp. The
+/// simulated chain must be invariant under all of these (pinned by
+/// `tests/fault_injection.rs`); the knob exists precisely so tests can
+/// permute it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TieBreak {
+    /// Insertion order (the default).
+    Fifo,
+    /// Reverse insertion order.
+    Lifo,
+    /// Highest node index first.
+    NodeDesc,
+    /// Pseudo-random order keyed by the salt.
+    Hashed(u64),
+}
+
+impl TieBreak {
+    fn key(&self, kind: &EventKind, seq: u64) -> u64 {
+        match *self {
+            TieBreak::Fifo => 0, // fall through to ascending seq
+            TieBreak::Lifo => u64::MAX - seq,
+            TieBreak::NodeDesc => u64::MAX - kind.node() as u64,
+            TieBreak::Hashed(salt) => {
+                let mut s = salt ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ (kind.node() as u64);
+                splitmix64(&mut s)
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    time: f64,
+    key: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed so the max-heap pops the earliest event; seq last so
+        // ordering is always total and deterministic
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.key.cmp(&self.key))
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Virtual-time event queue with deterministic, policy-driven
+/// tie-breaking.
+#[derive(Debug)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    tie: TieBreak,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new(tie: TieBreak) -> Self {
+        EventQueue { heap: BinaryHeap::new(), tie, seq: 0 }
+    }
+
+    /// Schedule `kind` to fire at virtual time `time`.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite(), "event time must be finite");
+        let key = self.tie.key(&kind, self.seq);
+        self.heap.push(Event { time, key, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event (ties resolved by policy, then sequence).
+    pub fn pop(&mut self) -> Option<(f64, EventKind)> {
+        self.heap.pop().map(|e| (e.time, e.kind))
+    }
+
+    /// Drop every pending event (crash rollback discards in-flight work).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new(TieBreak::Fifo);
+        q.push(2.0, EventKind::RestartDone);
+        q.push(0.5, EventKind::NodeFinish { node: 1, t: 3 });
+        q.push(1.0, EventKind::NodeFinish { node: 0, t: 1 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn fifo_ties_pop_in_insertion_order() {
+        let mut q = EventQueue::new(TieBreak::Fifo);
+        for node in 0..5 {
+            q.push(1.0, EventKind::NodeFinish { node, t: 1 });
+        }
+        let nodes: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|(_, k)| match k {
+                EventKind::NodeFinish { node, .. } => node,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(nodes, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lifo_and_node_desc_reverse_ties() {
+        for tie in [TieBreak::Lifo, TieBreak::NodeDesc] {
+            let mut q = EventQueue::new(tie);
+            for node in 0..4 {
+                q.push(1.0, EventKind::NodeFinish { node, t: 1 });
+            }
+            let nodes: Vec<usize> = std::iter::from_fn(|| {
+                q.pop().map(|(_, k)| match k {
+                    EventKind::NodeFinish { node, .. } => node,
+                    _ => unreachable!(),
+                })
+            })
+            .collect();
+            assert_eq!(nodes, vec![3, 2, 1, 0], "{tie:?}");
+        }
+    }
+
+    #[test]
+    fn hashed_ties_are_deterministic_per_salt() {
+        let order = |salt: u64| -> Vec<usize> {
+            let mut q = EventQueue::new(TieBreak::Hashed(salt));
+            for node in 0..6 {
+                q.push(1.0, EventKind::NodeFinish { node, t: 1 });
+            }
+            std::iter::from_fn(|| {
+                q.pop().map(|(_, k)| match k {
+                    EventKind::NodeFinish { node, .. } => node,
+                    _ => unreachable!(),
+                })
+            })
+            .collect()
+        };
+        assert_eq!(order(7), order(7));
+        assert_ne!(order(7), order(8), "different salts should permute ties");
+    }
+
+    #[test]
+    fn clear_empties_the_queue() {
+        let mut q = EventQueue::new(TieBreak::Fifo);
+        q.push(1.0, EventKind::RestartDone);
+        assert_eq!(q.len(), 1);
+        q.clear();
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+}

@@ -1,0 +1,302 @@
+//! Deterministic fault schedules for the async cluster simulator.
+//!
+//! A [`FaultPlan`] is a *data structure*, not a random process: every
+//! straggler window, crash, drop and delay is keyed by logical
+//! coordinates (node index, iteration number) — never by wall or
+//! virtual time — so replaying the same plan yields the same run,
+//! event-for-event. [`FaultPlan::seeded`] derives a plan
+//! pseudo-randomly from a seed with per-`(node, t)` RNG streams, which
+//! makes generated plans independent of enumeration order too.
+
+use crate::rng::Rng;
+use crate::{Error, Result};
+
+/// Multiply node `node`'s compute time by `factor` for iterations
+/// `from_t..=to_t` (a slow machine, a noisy neighbour, a GC pause).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerRule {
+    pub node: usize,
+    pub from_t: u64,
+    pub to_t: u64,
+    pub factor: f64,
+}
+
+/// Node `node` crashes when it is about to start iteration `at_t`; the
+/// cluster rolls back to the last checkpoint and restarts. Each rule
+/// fires exactly once.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrashRule {
+    pub node: usize,
+    pub at_t: u64,
+}
+
+/// The first `count` transmission attempts of the ring message node
+/// `from` produces at iteration `produced_at` are lost (the sender
+/// retries after a timeout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DropRule {
+    pub from: usize,
+    pub produced_at: u64,
+    pub count: u32,
+}
+
+/// The ring message node `from` produces at iteration `produced_at` is
+/// delivered `extra_s` virtual seconds late.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DelayRule {
+    pub from: usize,
+    pub produced_at: u64,
+    pub extra_s: f64,
+}
+
+/// A full deterministic failure schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub stragglers: Vec<StragglerRule>,
+    pub crashes: Vec<CrashRule>,
+    pub drops: Vec<DropRule>,
+    pub delays: Vec<DelayRule>,
+}
+
+/// Per-(node, iteration) probabilities used by [`FaultPlan::seeded`].
+#[derive(Clone, Copy, Debug)]
+pub struct FaultRates {
+    /// P(a straggler window starts here); the window lasts `straggler_iters`.
+    pub straggler_prob: f64,
+    pub straggler_factor: f64,
+    pub straggler_iters: u64,
+    /// P(the node crashes when starting this iteration).
+    pub crash_prob: f64,
+    /// P(the message produced here is dropped once).
+    pub drop_prob: f64,
+    /// P(the message produced here is delayed by `extra_delay_s`).
+    pub delay_prob: f64,
+    pub extra_delay_s: f64,
+}
+
+impl Default for FaultRates {
+    fn default() -> Self {
+        FaultRates {
+            straggler_prob: 0.02,
+            straggler_factor: 4.0,
+            straggler_iters: 3,
+            crash_prob: 0.005,
+            drop_prob: 0.01,
+            delay_prob: 0.02,
+            extra_delay_s: 2e-3,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The no-fault plan.
+    pub fn empty() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stragglers.is_empty()
+            && self.crashes.is_empty()
+            && self.drops.is_empty()
+            && self.delays.is_empty()
+    }
+
+    /// Derive a plan pseudo-randomly from `seed`. Each `(node, t)` cell
+    /// gets its own RNG stream with a fixed draw order (straggler,
+    /// crash, drop, delay), so the plan is a pure function of
+    /// `(seed, b, t_total, rates)`.
+    pub fn seeded(seed: u64, b: usize, t_total: u64, rates: &FaultRates) -> Self {
+        let mut plan = FaultPlan::default();
+        for node in 0..b {
+            for t in 1..=t_total {
+                let mut rng = Rng::derive(seed, &[0xfa_0175, node as u64, t]);
+                if rng.next_f64() < rates.straggler_prob {
+                    plan.stragglers.push(StragglerRule {
+                        node,
+                        from_t: t,
+                        to_t: t + rates.straggler_iters.saturating_sub(1),
+                        factor: rates.straggler_factor,
+                    });
+                }
+                if rng.next_f64() < rates.crash_prob {
+                    plan.crashes.push(CrashRule { node, at_t: t });
+                }
+                if rng.next_f64() < rates.drop_prob {
+                    plan.drops.push(DropRule { from: node, produced_at: t, count: 1 });
+                }
+                if rng.next_f64() < rates.delay_prob {
+                    plan.delays.push(DelayRule {
+                        from: node,
+                        produced_at: t,
+                        extra_s: rates.extra_delay_s,
+                    });
+                }
+            }
+        }
+        plan
+    }
+
+    /// Reject plans that reference nodes outside `0..b` or carry
+    /// non-physical parameters — with messages that say which rule and
+    /// what to fix, so a bad plan never reaches the event loop.
+    pub fn validate(&self, b: usize) -> Result<()> {
+        let node_err = |kind: &str, node: usize| {
+            Error::Config(format!(
+                "FaultPlan {kind} rule references node {node}, but the simulated cluster \
+                 has only {b} nodes (valid indices 0..{b}); fix the rule or raise B"
+            ))
+        };
+        for r in &self.stragglers {
+            if r.node >= b {
+                return Err(node_err("straggler", r.node));
+            }
+            if !(r.factor > 0.0 && r.factor.is_finite()) {
+                return Err(Error::Config(format!(
+                    "FaultPlan straggler factor must be positive and finite, got {}",
+                    r.factor
+                )));
+            }
+            if r.from_t == 0 || r.to_t < r.from_t {
+                return Err(Error::Config(format!(
+                    "FaultPlan straggler window [{}, {}] is invalid (iterations are \
+                     1-based and the window must be non-empty)",
+                    r.from_t, r.to_t
+                )));
+            }
+        }
+        for r in &self.crashes {
+            if r.node >= b {
+                return Err(node_err("crash", r.node));
+            }
+            if r.at_t == 0 {
+                return Err(Error::Config(
+                    "FaultPlan crash at iteration 0 is invalid (iterations are 1-based)"
+                        .into(),
+                ));
+            }
+        }
+        for r in &self.drops {
+            if r.from >= b {
+                return Err(node_err("drop", r.from));
+            }
+        }
+        for r in &self.delays {
+            if r.from >= b {
+                return Err(node_err("delay", r.from));
+            }
+            if !(r.extra_s >= 0.0 && r.extra_s.is_finite()) {
+                return Err(Error::Config(format!(
+                    "FaultPlan delay extra_s must be >= 0 and finite, got {}",
+                    r.extra_s
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Compute-time multiplier for node `node` at iteration `t`
+    /// (overlapping windows compound).
+    pub fn slowdown(&self, node: usize, t: u64) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|r| r.node == node && (r.from_t..=r.to_t).contains(&t))
+            .map(|r| r.factor)
+            .product()
+    }
+
+    /// How many transmission attempts of `(from, produced_at)`'s
+    /// message are lost.
+    pub fn drop_count(&self, from: usize, produced_at: u64) -> u32 {
+        self.drops
+            .iter()
+            .filter(|r| r.from == from && r.produced_at == produced_at)
+            .map(|r| r.count)
+            .sum()
+    }
+
+    /// Extra delivery delay for `(from, produced_at)`'s message.
+    pub fn extra_delay(&self, from: usize, produced_at: u64) -> f64 {
+        self.delays
+            .iter()
+            .filter(|r| r.from == from && r.produced_at == produced_at)
+            .map(|r| r.extra_s)
+            .sum()
+    }
+
+    /// Whether node `node` is scheduled to crash when starting `t`.
+    pub fn crash_at(&self, node: usize, t: u64) -> bool {
+        self.crashes.iter().any(|r| r.node == node && r.at_t == t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::empty();
+        assert!(p.is_empty());
+        assert!(p.validate(4).is_ok());
+        assert_eq!(p.slowdown(0, 1), 1.0);
+        assert_eq!(p.drop_count(0, 1), 0);
+        assert_eq!(p.extra_delay(0, 1), 0.0);
+        assert!(!p.crash_at(0, 1));
+    }
+
+    #[test]
+    fn seeded_is_deterministic() {
+        let rates = FaultRates { crash_prob: 0.1, drop_prob: 0.2, ..Default::default() };
+        let a = FaultPlan::seeded(99, 4, 50, &rates);
+        let b = FaultPlan::seeded(99, 4, 50, &rates);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.validate(4).is_ok());
+        let c = FaultPlan::seeded(100, 4, 50, &rates);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn rule_lookups() {
+        let p = FaultPlan {
+            stragglers: vec![StragglerRule { node: 1, from_t: 5, to_t: 7, factor: 3.0 }],
+            crashes: vec![CrashRule { node: 2, at_t: 9 }],
+            drops: vec![
+                DropRule { from: 0, produced_at: 4, count: 2 },
+                DropRule { from: 0, produced_at: 4, count: 1 },
+            ],
+            delays: vec![DelayRule { from: 3, produced_at: 2, extra_s: 0.5 }],
+        };
+        assert!(p.validate(4).is_ok());
+        assert_eq!(p.slowdown(1, 5), 3.0);
+        assert_eq!(p.slowdown(1, 8), 1.0);
+        assert_eq!(p.slowdown(0, 5), 1.0);
+        assert_eq!(p.drop_count(0, 4), 3);
+        assert_eq!(p.extra_delay(3, 2), 0.5);
+        assert!(p.crash_at(2, 9));
+        assert!(!p.crash_at(2, 8));
+    }
+
+    #[test]
+    fn validate_rejects_bad_nodes_with_actionable_message() {
+        let p = FaultPlan {
+            crashes: vec![CrashRule { node: 7, at_t: 3 }],
+            ..Default::default()
+        };
+        let msg = format!("{}", p.validate(4).unwrap_err());
+        assert!(msg.contains("node 7"), "{msg}");
+        assert!(msg.contains("only 4 nodes"), "{msg}");
+
+        let p = FaultPlan {
+            stragglers: vec![StragglerRule { node: 0, from_t: 3, to_t: 2, factor: 2.0 }],
+            ..Default::default()
+        };
+        assert!(p.validate(4).is_err());
+
+        let p = FaultPlan {
+            delays: vec![DelayRule { from: 0, produced_at: 1, extra_s: f64::NAN }],
+            ..Default::default()
+        };
+        assert!(p.validate(4).is_err());
+    }
+}

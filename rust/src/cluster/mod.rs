@@ -24,16 +24,70 @@
 //! time; `Fidelity::Timing` charges time only, which lets the
 //! 683 584 × 4 580 288 weak-scaling point of Fig. 6(b) run without
 //! allocating 640M entries.
+//!
+//! # DESIGN: the asynchronous fault-injecting executor
+//!
+//! The synchronous simulator above advances all nodes in lock-step — a
+//! barrier per iteration — which models the paper's §4.3 cluster but
+//! not a production one, where stragglers, crashes and lost messages
+//! are the normal case. The `async_sim` submodule therefore runs the
+//! same chain through a **discrete-event loop**:
+//!
+//! * **Events** ([`event`]): `NodeFinish`, `MsgArrive`, `RetryTimer`,
+//!   `RestartDone` on a virtual-time priority queue. Ties are resolved
+//!   by a pluggable [`TieBreak`] policy that must never influence the
+//!   chain (only per-`(seed, t, block)` RNG streams do) — tests permute
+//!   the policy to pin this.
+//! * **Bounded staleness** ([`staleness`]): node `i` may start
+//!   iteration `t` while its cached `H` stripe is up to `tau`
+//!   iterations stale; past the bound it stalls until the hand-off
+//!   arrives. Under the cyclic ring a node revisits a stripe every `B`
+//!   iterations, so in steady state its cached copy is either fresh
+//!   (the hand-off arrived) or a whole ring lap old: attainable
+//!   staleness values are `0, B - 1, 2B - 1, …` (plus `1..B - 1`
+//!   transiently, inherited from the init copies). Hence small `tau`
+//!   behaves near-synchronously and `tau >= B - 1` admits genuinely
+//!   lap-stale updates — the regime the convergence tests exercise.
+//!   The [`StalenessLedger`] refuses to record a bound
+//!   violation, making "staleness never exceeds tau" an executor
+//!   invariant rather than a hope.
+//! * **Faults** ([`fault`]): a [`FaultPlan`] is a deterministic
+//!   schedule keyed by `(node, iteration)` — straggler windows multiply
+//!   compute time, crash rules trigger a coordinated rollback to the
+//!   last consistent checkpoint (via [`crate::coordinator::Checkpoint`]),
+//!   drop/delay rules act on the ring messages, with timeout +
+//!   exponential-backoff retries that fail loudly past `max_retries`.
+//! * **Consistent snapshots**: updates apply at iteration start; a
+//!   per-iteration slot collects every node's updated stripes and
+//!   completes when all `B` nodes have finished that iteration —
+//!   completion is monotone in `t`, so monitoring, checkpointing and
+//!   recovery all see exact global states without ever imposing a
+//!   barrier on the executor.
+//!
+//! With `tau = 0` and an empty plan the async executor reproduces the
+//! synchronous chains bitwise (for mirror models, whose nonneg fast
+//! path needs no global rescan); `benches/fault_sweep.rs` measures
+//! throughput and held-out likelihood across crash-rate × tau.
+
+pub mod async_sim;
+pub mod event;
+pub mod fault;
+pub mod staleness;
+
+pub use async_sim::{psgld_distributed_async, AsyncSimReport};
+pub use event::{EventKind, EventQueue, Msg, TieBreak};
+pub use fault::{CrashRule, DelayRule, DropRule, FaultPlan, FaultRates, StragglerRule};
+pub use staleness::{StaleRecord, StalenessLedger};
 
 use crate::config::RunConfig;
 use crate::data::sparse::{BlockedSparse, Csr};
-use crate::kernels::{grads_sparse_core, sgld_apply_core};
+use crate::kernels::sgld_apply_core;
 use crate::linalg::Mat;
 use crate::metrics::Trace;
 use crate::model::NmfModel;
 use crate::partition::{Part, PartScheduler};
 use crate::rng::Rng;
-use crate::samplers::FactorState;
+use crate::samplers::{sparse_block_langevin, FactorState};
 use crate::util::parallel::{default_threads, SendPtr, WorkerPool};
 use crate::Result;
 
@@ -257,18 +311,10 @@ pub fn psgld_distributed_full(
                 let sb = unsafe { &mut *scratch_ptr.get().add(bi) };
                 let gw = &mut sb.0[..m * k];
                 let ght = &mut sb.1[..n * k];
-                gw.fill(0.0);
-                ght.fill(0.0);
-                grads_sparse_core(
-                    w_slice, ht_slice, k, blocked.block(bi, bj),
-                    model.beta, model.phi, nonneg, gw, ght,
-                );
-                let mut brng = Rng::derive(seed, &[t, bi as u64]);
-                sgld_apply_core(
-                    w_slice, gw, eps, scale, model.lam_w, model.mirror, &mut brng, arena,
-                );
-                sgld_apply_core(
-                    ht_slice, ght, eps, scale, model.lam_h, model.mirror, &mut brng, arena,
+                // shared canonical block body (samplers/block_step.rs)
+                sparse_block_langevin(
+                    w_slice, ht_slice, k, blocked.block(bi, bj), model, nonneg,
+                    eps, scale, seed, t, bi as u64, gw, ght, arena,
                 );
             });
         }

@@ -1,0 +1,134 @@
+//! Staleness accounting for bounded-staleness PSGLD.
+//!
+//! Every block update in the async executor records how stale the `H`
+//! stripe it consumed was (in iterations behind the freshest version).
+//! The ledger *enforces* the bound — recording a violation is an error,
+//! not a statistic — so "staleness never exceeds `tau`" is checkable by
+//! construction and asserted again from the outside by the tests.
+
+use crate::{Error, Result};
+
+/// One block update's staleness observation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StaleRecord {
+    /// Node that performed the update.
+    pub node: usize,
+    /// Iteration of the update (1-based).
+    pub t: u64,
+    /// How many iterations behind fresh the consumed `H` stripe was.
+    pub staleness: u64,
+}
+
+/// Append-only log of staleness observations, truncated on rollback.
+#[derive(Clone, Debug)]
+pub struct StalenessLedger {
+    tau: u64,
+    records: Vec<StaleRecord>,
+}
+
+impl StalenessLedger {
+    pub fn new(tau: u64) -> Self {
+        StalenessLedger { tau, records: Vec::new() }
+    }
+
+    pub fn tau(&self) -> u64 {
+        self.tau
+    }
+
+    /// Record one observation; refuses to log a bound violation (the
+    /// executor must stall instead of proceeding past `tau`).
+    pub fn record(&mut self, node: usize, t: u64, staleness: u64) -> Result<()> {
+        if staleness > self.tau {
+            return Err(Error::Runtime(format!(
+                "staleness bound violated: node {node} at iteration {t} proceeded with an \
+                 H block {staleness} iterations stale but tau={} — executor bug",
+                self.tau
+            )));
+        }
+        self.records.push(StaleRecord { node, t, staleness });
+        Ok(())
+    }
+
+    /// Drop every record past iteration `c` (crash rollback).
+    pub fn truncate_after(&mut self, c: u64) {
+        self.records.retain(|r| r.t <= c);
+    }
+
+    pub fn records(&self) -> &[StaleRecord] {
+        &self.records
+    }
+
+    pub fn max_staleness(&self) -> u64 {
+        self.records.iter().map(|r| r.staleness).max().unwrap_or(0)
+    }
+
+    /// Fraction of updates that consumed a stale (staleness > 0) block.
+    pub fn stale_fraction(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let stale = self.records.iter().filter(|r| r.staleness > 0).count();
+        stale as f64 / self.records.len() as f64
+    }
+
+    /// Per-node `(max, mean, count)` staleness over `b` nodes.
+    pub fn per_node(&self, b: usize) -> Vec<(u64, f64, u64)> {
+        let mut max = vec![0u64; b];
+        let mut sum = vec![0u64; b];
+        let mut cnt = vec![0u64; b];
+        for r in &self.records {
+            max[r.node] = max[r.node].max(r.staleness);
+            sum[r.node] += r.staleness;
+            cnt[r.node] += 1;
+        }
+        (0..b)
+            .map(|i| (max[i], sum[i] as f64 / cnt[i].max(1) as f64, cnt[i]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_within_bound() {
+        let mut l = StalenessLedger::new(2);
+        l.record(0, 1, 0).unwrap();
+        l.record(1, 2, 2).unwrap();
+        assert_eq!(l.records().len(), 2);
+        assert_eq!(l.max_staleness(), 2);
+        assert_eq!(l.stale_fraction(), 0.5);
+    }
+
+    #[test]
+    fn rejects_bound_violation_loudly() {
+        let mut l = StalenessLedger::new(1);
+        let msg = format!("{}", l.record(3, 10, 2).unwrap_err());
+        assert!(msg.contains("node 3"), "{msg}");
+        assert!(msg.contains("tau=1"), "{msg}");
+    }
+
+    #[test]
+    fn truncate_after_rollback() {
+        let mut l = StalenessLedger::new(4);
+        for t in 1..=10 {
+            l.record(0, t, 0).unwrap();
+        }
+        l.truncate_after(6);
+        assert_eq!(l.records().len(), 6);
+        assert!(l.records().iter().all(|r| r.t <= 6));
+    }
+
+    #[test]
+    fn per_node_summary() {
+        let mut l = StalenessLedger::new(4);
+        l.record(0, 1, 0).unwrap();
+        l.record(0, 2, 4).unwrap();
+        l.record(1, 1, 1).unwrap();
+        let pn = l.per_node(3);
+        assert_eq!(pn[0], (4, 2.0, 2));
+        assert_eq!(pn[1], (1, 1.0, 1));
+        assert_eq!(pn[2], (0, 0.0, 0));
+    }
+}

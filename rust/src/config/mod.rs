@@ -205,6 +205,130 @@ impl RunConfig {
     }
 }
 
+/// Knobs of the asynchronous (fault-injecting) cluster executor:
+/// bounded staleness, checkpointing cadence, and the retry policy for
+/// dropped ring messages. See `cluster/async_sim.rs` for semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncClusterConfig {
+    /// Staleness bound: a node may proceed with an `H` block at most
+    /// `tau` iterations stale; past the bound it blocks until the ring
+    /// hand-off arrives. `tau = 0` is fully synchronous semantics.
+    pub tau: u64,
+    /// Take a consistent checkpoint every `checkpoint_every` iterations
+    /// (0 disables checkpointing; crashes then roll back to iteration 0).
+    pub checkpoint_every: u64,
+    /// Directory for on-disk checkpoints; `None` keeps checkpoints in
+    /// memory only (still sufficient for crash recovery in-simulation).
+    pub checkpoint_dir: Option<String>,
+    /// Virtual seconds before an unacknowledged ring message is
+    /// retransmitted.
+    pub msg_timeout_s: f64,
+    /// Multiplicative backoff applied to the timeout per retry.
+    pub retry_backoff: f64,
+    /// Retransmissions allowed before the run fails loudly.
+    pub max_retries: u32,
+    /// Virtual seconds a crashed node takes to come back up.
+    pub restart_delay_s: f64,
+}
+
+impl Default for AsyncClusterConfig {
+    fn default() -> Self {
+        AsyncClusterConfig {
+            tau: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            msg_timeout_s: 5e-3,
+            retry_backoff: 2.0,
+            max_retries: 16,
+            restart_delay_s: 0.5,
+        }
+    }
+}
+
+impl AsyncClusterConfig {
+    pub fn with_tau(mut self, tau: u64) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    pub fn with_checkpoint_every(mut self, every: u64) -> Self {
+        self.checkpoint_every = every;
+        self
+    }
+
+    pub fn with_checkpoint_dir(mut self, dir: impl Into<String>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.msg_timeout_s > 0.0 && self.msg_timeout_s.is_finite()) {
+            return Err(Error::Config(format!(
+                "msg_timeout_s must be positive and finite, got {}",
+                self.msg_timeout_s
+            )));
+        }
+        if !(self.retry_backoff >= 1.0 && self.retry_backoff.is_finite()) {
+            return Err(Error::Config(format!(
+                "retry_backoff must be >= 1 and finite, got {}",
+                self.retry_backoff
+            )));
+        }
+        if !(self.restart_delay_s >= 0.0 && self.restart_delay_s.is_finite()) {
+            return Err(Error::Config(format!(
+                "restart_delay_s must be >= 0 and finite, got {}",
+                self.restart_delay_s
+            )));
+        }
+        if self.max_retries == 0 {
+            return Err(Error::Config(
+                "max_retries must be >= 1 (a dropped message would hang otherwise)".into(),
+            ));
+        }
+        if self.checkpoint_dir.is_some() && self.checkpoint_every == 0 {
+            return Err(Error::Config(
+                "checkpoint_dir is set but checkpoint_every is 0; set checkpoint_every >= 1"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tau", Json::num(self.tau as f64)),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            (
+                "checkpoint_dir",
+                match &self.checkpoint_dir {
+                    Some(d) => Json::str(d.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("msg_timeout_s", Json::num(self.msg_timeout_s)),
+            ("retry_backoff", Json::num(self.retry_backoff)),
+            ("max_retries", Json::num(self.max_retries as f64)),
+            ("restart_delay_s", Json::num(self.restart_delay_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let checkpoint_dir = match j.field("checkpoint_dir")? {
+            Json::Null => None,
+            other => Some(other.as_str()?.to_string()),
+        };
+        Ok(AsyncClusterConfig {
+            tau: j.field("tau")?.as_u64()?,
+            checkpoint_every: j.field("checkpoint_every")?.as_u64()?,
+            checkpoint_dir,
+            msg_timeout_s: j.field("msg_timeout_s")?.as_f64()?,
+            retry_backoff: j.field("retry_backoff")?.as_f64()?,
+            max_retries: j.field("max_retries")?.as_u64()? as u32,
+            restart_delay_s: j.field("restart_delay_s")?.as_f64()?,
+        })
+    }
+}
+
 /// A full experiment description (what the CLI consumes).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -316,6 +440,32 @@ mod tests {
         assert_eq!(back.b, 8);
         assert_eq!(back.run.schedule, PartSchedule::RandomShift);
         assert_eq!(back.run.step, cfg.run.step);
+    }
+
+    #[test]
+    fn async_cluster_config_roundtrip_and_validation() {
+        let cfg = AsyncClusterConfig::default()
+            .with_tau(4)
+            .with_checkpoint_every(25)
+            .with_checkpoint_dir("/tmp/ckpts");
+        assert!(cfg.validate().is_ok());
+        let back = AsyncClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+
+        // None dir survives the roundtrip as Null
+        let plain = AsyncClusterConfig::default();
+        assert!(plain.validate().is_ok());
+        let back = AsyncClusterConfig::from_json(&plain.to_json()).unwrap();
+        assert_eq!(back, plain);
+
+        let bad = AsyncClusterConfig { msg_timeout_s: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = AsyncClusterConfig { retry_backoff: 0.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = AsyncClusterConfig { max_retries: 0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("hang"));
+        let bad = AsyncClusterConfig::default().with_checkpoint_dir("x");
+        assert!(bad.validate().unwrap_err().to_string().contains("checkpoint_every"));
     }
 
     #[test]

@@ -79,8 +79,29 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Load and validate.
+    /// Conventional on-disk location for the newest checkpoint in `dir`
+    /// (the async cluster executor always overwrites this one file, so
+    /// recovery never has to scan the directory).
+    pub fn latest_path(dir: &Path) -> std::path::PathBuf {
+        dir.join("latest.ckpt")
+    }
+
+    /// Load and validate. Any I/O failure mid-payload (short file,
+    /// unreadable disk) is rewrapped with the path and a hint that the
+    /// file is truncated or corrupted — restores must fail loudly, never
+    /// propagate a bare "unexpected EOF".
     pub fn load(path: &Path) -> Result<Self> {
+        Self::load_inner(path).map_err(|e| match e {
+            Error::Io(io) => Error::Runtime(format!(
+                "failed to read checkpoint {}: {io} (file truncated or corrupted? \
+                 delete it to restart from scratch)",
+                path.display()
+            )),
+            other => other,
+        })
+    }
+
+    fn load_inner(path: &Path) -> Result<Self> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
@@ -174,5 +195,28 @@ mod tests {
         let err = Checkpoint::load(&path).unwrap_err();
         assert!(format!("{err}").contains("magic"));
         assert!(Checkpoint::load(&tmpdir().join("missing.ckpt")).is_err());
+    }
+
+    #[test]
+    fn truncated_checkpoint_error_is_actionable() {
+        // valid header, payload cut short: the error must name the file
+        // and say it looks truncated/corrupted, not just "unexpected EOF"
+        let model = NmfModel::poisson(2);
+        let mut rng = Rng::seed_from(3);
+        let state = FactorState::from_prior(&model, 6, 6, &mut rng);
+        let dir = tmpdir();
+        let path = dir.join("trunc.ckpt");
+        Checkpoint::new(10, 1, &state).save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let msg = format!("{}", Checkpoint::load(&path).unwrap_err());
+        assert!(msg.contains("trunc.ckpt"), "{msg}");
+        assert!(msg.contains("truncated or corrupted"), "{msg}");
+    }
+
+    #[test]
+    fn latest_path_is_stable() {
+        let d = std::path::Path::new("/some/dir");
+        assert_eq!(Checkpoint::latest_path(d), d.join("latest.ckpt"));
     }
 }

@@ -6,7 +6,7 @@ pub mod diagnostics;
 pub mod trace;
 
 pub use diagnostics::{autocorrelation, gelman_rubin, geweke_z};
-pub use trace::{SummaryStats, Trace};
+pub use trace::{NodeStats, SummaryStats, Trace};
 
 use crate::data::sparse::Csr;
 use crate::linalg::Mat;

@@ -7,6 +7,35 @@ use std::path::Path;
 
 use crate::Result;
 
+/// Per-node robustness counters collected by the async cluster
+/// executor: how often a node stalled on the staleness bound, how much
+/// virtual time it lost, how its ring traffic fared, and how stale the
+/// `H` blocks it consumed actually were.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeStats {
+    /// Logical node index `0..B`.
+    pub node: usize,
+    /// Iterations this node executed (including re-execution after
+    /// rollback).
+    pub iterations: u64,
+    /// Times the node blocked because a needed block exceeded `tau`.
+    pub stalls: u64,
+    /// Virtual seconds spent blocked.
+    pub stall_seconds: f64,
+    /// Crash→restart cycles this node went through.
+    pub recoveries: u64,
+    /// Ring messages this node produced.
+    pub msgs_sent: u64,
+    /// Ring messages from this node the network dropped.
+    pub msgs_dropped: u64,
+    /// Retransmissions after timeouts.
+    pub retries: u64,
+    /// Largest staleness (iterations) the node ever proceeded with.
+    pub max_staleness: u64,
+    /// Mean staleness over the node's executed iterations.
+    pub mean_staleness: f64,
+}
+
 /// A named series of (iteration, seconds, value) observations.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
@@ -14,6 +43,9 @@ pub struct Trace {
     pub iters: Vec<u64>,
     pub seconds: Vec<f64>,
     pub values: Vec<f64>,
+    /// Per-node robustness counters (empty outside the async cluster
+    /// executor).
+    pub node_stats: Vec<NodeStats>,
 }
 
 impl Trace {
@@ -78,6 +110,37 @@ impl Trace {
         writeln!(f, "iter,seconds,{}", self.name)?;
         for i in 0..self.len() {
             writeln!(f, "{},{},{}", self.iters[i], self.seconds[i], self.values[i])?;
+        }
+        Ok(())
+    }
+
+    /// Write the per-node robustness counters as CSV (one row per node,
+    /// with a header). No-op columns are still written so downstream
+    /// plotting stays schema-stable.
+    pub fn write_node_stats_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            f,
+            "node,iterations,stalls,stall_seconds,recoveries,msgs_sent,msgs_dropped,retries,max_staleness,mean_staleness"
+        )?;
+        for s in &self.node_stats {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{},{}",
+                s.node,
+                s.iterations,
+                s.stalls,
+                s.stall_seconds,
+                s.recoveries,
+                s.msgs_sent,
+                s.msgs_dropped,
+                s.retries,
+                s.max_staleness,
+                s.mean_staleness
+            )?;
         }
         Ok(())
     }
@@ -189,6 +252,29 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("iter,seconds,x"));
         assert!(text.contains("1,0.5,2.5"));
+    }
+
+    #[test]
+    fn node_stats_csv() {
+        let dir = std::env::temp_dir().join("psgld_trace_test");
+        let path = dir.join("nodes.csv");
+        let mut t = Trace::new("async");
+        t.node_stats.push(NodeStats {
+            node: 1,
+            iterations: 40,
+            stalls: 3,
+            stall_seconds: 0.25,
+            recoveries: 1,
+            msgs_sent: 39,
+            msgs_dropped: 2,
+            retries: 2,
+            max_staleness: 2,
+            mean_staleness: 0.5,
+        });
+        t.write_node_stats_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("node,iterations,stalls"));
+        assert!(text.contains("1,40,3,0.25,1,39,2,2,2,0.5"));
     }
 
     #[test]

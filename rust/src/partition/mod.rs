@@ -239,6 +239,26 @@ impl PartScheduler {
     }
 }
 
+/// Stateless variant of [`PartScheduler`]: overwrite `part` with the
+/// part used at (1-based) iteration `t`, given the per-iteration RNG
+/// stream (`Rng::derive(seed, &[t, 0xcafe])` in every executor).
+///
+/// This makes the part a pure function of `(schedule, b, t, seed)`, so
+/// asynchronous executors can compute a node's part for any iteration
+/// without replaying a stateful scheduler — and it provably matches the
+/// stateful path: `Cyclic` uses shift `(t-1) % b` (the scheduler's
+/// sweep, which starts at shift 0 for `t = 1`), and the random
+/// schedules consume identical draws from the same stream.
+pub fn part_at_iter(schedule: PartSchedule, b: usize, t: u64, rng: &mut Rng, part: &mut Part) {
+    debug_assert_eq!(part.perm.len(), b);
+    debug_assert!(t >= 1, "iterations are 1-based");
+    match schedule {
+        PartSchedule::Cyclic => part.set_cyclic(((t - 1) % b as u64) as usize),
+        PartSchedule::RandomShift => part.set_cyclic(rng.next_below(b as u64) as usize),
+        PartSchedule::RandomPerm => part.set_random(rng),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,6 +366,30 @@ mod tests {
             }
             // identical RNG consumption: streams still aligned
             assert_eq!(rng_a.next_below(1_000_003), rng_b.next_below(1_000_003));
+        }
+    }
+
+    #[test]
+    fn part_at_iter_matches_stateful_scheduler() {
+        // The async executor derives parts statelessly; both paths must
+        // agree for every schedule when fed the per-iteration streams
+        // the executors actually use.
+        for sched in [
+            PartSchedule::Cyclic,
+            PartSchedule::RandomShift,
+            PartSchedule::RandomPerm,
+        ] {
+            let seed = 42u64;
+            let mut sched_state = PartScheduler::new(sched, 4);
+            let mut stateful = Part::identity(4);
+            let mut stateless = Part::identity(4);
+            for t in 1..=13u64 {
+                let mut rng_a = Rng::derive(seed, &[t, 0xcafe]);
+                let mut rng_b = Rng::derive(seed, &[t, 0xcafe]);
+                sched_state.next_part_into(&mut rng_a, &mut stateful);
+                part_at_iter(sched, 4, t, &mut rng_b, &mut stateless);
+                assert_eq!(stateful, stateless, "{sched:?} t={t}");
+            }
         }
     }
 

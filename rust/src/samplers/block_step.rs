@@ -1,0 +1,112 @@
+//! The canonical per-block Langevin update, shared by every executor.
+//!
+//! One iteration of PSGLD decomposes into `B` independent block updates
+//! (gradient over the block's observed entries + SGLD parameter step on
+//! the block's `W` row-stripe and `H_b` column-stripe). Three executors
+//! run this body — the shared-memory [`super::Psgld`], the synchronous
+//! virtual-time cluster simulator, and the async fault-injecting
+//! executor in [`crate::cluster::async_sim`] — and they must stay
+//! *bitwise identical* given identical inputs. Centralising the body
+//! here makes drift impossible by construction.
+//!
+//! Determinism contract (load-bearing; tests pin it):
+//!
+//! * the per-block RNG stream is derived from `(seed, t, block)` and
+//!   **nothing else** — never the worker slot, never the event-queue pop
+//!   order, never wall-clock state;
+//! * the noise draws go `W` first, then `Ht`, from the same stream;
+//! * gradient accumulators are zeroed here, so callers can reuse
+//!   scratch without washing it themselves.
+
+use crate::data::sparse::BlockEntries;
+use crate::kernels::{grads_sparse_core, sgld_apply_core};
+use crate::model::NmfModel;
+use crate::rng::Rng;
+use crate::util::parallel::ScratchArena;
+
+/// One sparse-data block-Langevin update: accumulate the block gradient
+/// into `(gw, ght)` and apply the SGLD step to `w` (the `m × k` row
+/// stripe) and `ht` (the `n × k` column stripe, stored transposed), with
+/// the noise stream keyed by `(seed, t, block)`.
+///
+/// `nonneg` is the hoisted once-per-part fast-path decision (see
+/// [`crate::kernels::nonneg_hint`]); it must be computed identically by
+/// every executor that wants bitwise-equal chains.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_block_langevin(
+    w: &mut [f32],
+    ht: &mut [f32],
+    k: usize,
+    blk: &BlockEntries,
+    model: &NmfModel,
+    nonneg: bool,
+    eps: f32,
+    scale: f32,
+    seed: u64,
+    t: u64,
+    block: u64,
+    gw: &mut [f32],
+    ght: &mut [f32],
+    arena: &mut ScratchArena,
+) {
+    debug_assert_eq!(gw.len(), w.len());
+    debug_assert_eq!(ght.len(), ht.len());
+    gw.fill(0.0);
+    ght.fill(0.0);
+    let _ = grads_sparse_core(w, ht, k, blk, model.beta, model.phi, nonneg, gw, ght);
+    // Per-block stream keyed by (seed, t, block) — independent of which
+    // worker slot or event-loop turn executes the block.
+    let mut brng = Rng::derive(seed, &[t, block]);
+    sgld_apply_core(w, gw, eps, scale, model.lam_w, model.mirror, &mut brng, arena);
+    sgld_apply_core(ht, ght, eps, scale, model.lam_h, model.mirror, &mut brng, arena);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::movielens;
+    use crate::data::sparse::BlockedSparse;
+    use crate::kernels::nonneg_hint;
+
+    #[test]
+    fn repeated_call_with_same_tags_is_bitwise_identical() {
+        let csr = movielens::movielens_like_dims(24, 30, 200, 3, 41);
+        let blocked = BlockedSparse::from_csr(&csr, 3).unwrap();
+        let grid = blocked.grid().clone();
+        let model = NmfModel::poisson(3);
+        let mut rng = Rng::seed_from(7);
+        let k = model.k;
+        let (m, n) = (grid.row_range(0).len(), grid.col_range(1).len());
+        let w0: Vec<f32> = (0..m * k).map(|_| rng.next_f32() + 0.1).collect();
+        let h0: Vec<f32> = (0..n * k).map(|_| rng.next_f32() + 0.1).collect();
+        let nonneg = nonneg_hint(model.mirror, &w0, &h0, csr.nnz());
+
+        let run_once = || {
+            let (mut w, mut ht) = (w0.clone(), h0.clone());
+            let mut gw = vec![0f32; m * k];
+            let mut ght = vec![0f32; n * k];
+            let mut arena = ScratchArena::new();
+            sparse_block_langevin(
+                &mut w,
+                &mut ht,
+                k,
+                blocked.block(0, 1),
+                &model,
+                nonneg,
+                0.01,
+                1.5,
+                99,
+                5,
+                0,
+                &mut gw,
+                &mut ght,
+                &mut arena,
+            );
+            (w, ht)
+        };
+        let (w_a, h_a) = run_once();
+        let (w_b, h_b) = run_once();
+        assert_eq!(w_a, w_b);
+        assert_eq!(h_a, h_b);
+    }
+}

@@ -7,6 +7,7 @@
 //! driven by [`run_sampler`], which owns timing, monitoring and
 //! posterior-mean collection so per-sampler code is just `step`.
 
+pub mod block_step;
 pub mod coupled;
 pub mod dsgd;
 pub mod dsgld;
@@ -16,6 +17,7 @@ pub mod multichain;
 pub mod psgld;
 pub mod sgld;
 
+pub use block_step::sparse_block_langevin;
 pub use coupled::CoupledPsgld;
 pub use dsgd::Dsgd;
 pub use dsgld::Dsgld;

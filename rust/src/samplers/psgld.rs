@@ -26,7 +26,7 @@ use crate::metrics;
 use crate::model::NmfModel;
 use crate::partition::{GridPartition, Part, PartScheduler};
 use crate::rng::Rng;
-use crate::samplers::{run_sampler, FactorState, RunResult, Sampler};
+use crate::samplers::{run_sampler, sparse_block_langevin, FactorState, RunResult, Sampler};
 use crate::util::parallel::{
     default_threads, par_for_each_mut, ScratchArena, SendPtr, WorkerPool,
 };
@@ -285,6 +285,17 @@ impl Sampler for Psgld {
             let sb = unsafe { &mut *scratch_ptr.get().add(bi) };
             let gw = &mut sb.0[..m * k];
             let ght = &mut sb.1[..n * k];
+            if langevin {
+                if let DataBlocks::Sparse(bs) = data {
+                    // The sparse Langevin body is shared with both
+                    // cluster simulators; see samplers/block_step.rs.
+                    sparse_block_langevin(
+                        w, ht, k, bs.block(bi, bj), model, sparse_nonneg,
+                        eps, scale, seed, t, bi as u64, gw, ght, arena,
+                    );
+                    return;
+                }
+            }
             gw.fill(0.0);
             ght.fill(0.0);
             match data {

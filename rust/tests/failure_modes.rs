@@ -4,13 +4,17 @@
 
 use std::path::{Path, PathBuf};
 
-use psgld::config::{ExperimentConfig, RunConfig};
-use psgld::coordinator::HloPsgld;
-use psgld::data::synth;
+use psgld::cluster::{
+    psgld_distributed_async, ComputeModel, CrashRule, FaultPlan, NetworkModel, TieBreak,
+};
+use psgld::config::{AsyncClusterConfig, ExperimentConfig, RunConfig};
+use psgld::coordinator::{Checkpoint, HloPsgld};
+use psgld::data::{movielens, synth};
 use psgld::linalg::{Mat, StackedBlocks};
 use psgld::model::NmfModel;
 use psgld::partition::GridPartition;
 use psgld::runtime::{Manifest, XlaRuntime};
+use psgld::samplers::FactorState;
 use psgld::util::Json;
 
 fn tmp(name: &str) -> PathBuf {
@@ -153,4 +157,91 @@ fn stacked_blocks_from_empty_or_ragged() {
     assert!(StackedBlocks::from_blocks(&[]).is_err());
     let blocks = vec![Mat::zeros(2, 2), Mat::zeros(3, 2)];
     assert!(StackedBlocks::from_blocks(&blocks).is_err());
+}
+
+// --- async cluster executor failure paths ----------------------------
+
+fn sample_checkpoint() -> Checkpoint {
+    let mut rng = psgld::rng::Rng::seed_from(5);
+    let state = FactorState {
+        w: Mat::uniform(6, 3, 0.1, 1.0, &mut rng),
+        ht: Mat::uniform(8, 3, 0.1, 1.0, &mut rng),
+    };
+    Checkpoint::new(12, 99, &state)
+}
+
+#[test]
+fn corrupted_checkpoint_fails_loudly() {
+    let dir = tmp("ckpt_corrupt");
+    let path = dir.join("garbage.ckpt");
+    std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+    let msg = format!("{}", Checkpoint::load(&path).unwrap_err());
+    assert!(msg.contains("magic") || msg.contains("corrupt"), "{msg}");
+
+    // missing file: the error names the path, not just "No such file"
+    let msg = format!("{}", Checkpoint::load(&dir.join("nope.ckpt")).unwrap_err());
+    assert!(msg.contains("nope.ckpt"), "{msg}");
+}
+
+#[test]
+fn truncated_checkpoint_fails_loudly() {
+    let dir = tmp("ckpt_trunc");
+    let path = dir.join("latest.ckpt");
+    sample_checkpoint().save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let msg = format!("{}", Checkpoint::load(&path).unwrap_err());
+    assert!(
+        msg.contains("truncated") || msg.contains("corrupt"),
+        "truncated checkpoint error should say what to do: {msg}"
+    );
+    assert!(msg.contains("latest.ckpt"), "{msg}");
+}
+
+#[test]
+fn fault_plan_with_nonexistent_node_is_rejected_before_the_event_loop() {
+    let csr = movielens::movielens_like_dims(24, 30, 200, 3, 9);
+    let model = NmfModel::poisson(3);
+    let run = RunConfig::quick(10);
+    let plan = FaultPlan {
+        crashes: vec![CrashRule { node: 9, at_t: 2 }],
+        ..Default::default()
+    };
+    let err = psgld_distributed_async(
+        &csr,
+        &model,
+        4,
+        &run,
+        1,
+        &NetworkModel::paper_cluster(),
+        &ComputeModel::paper_node(),
+        &AsyncClusterConfig::default(),
+        &plan,
+        TieBreak::Fifo,
+        |_| 0.0,
+    )
+    .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("node 9"), "{msg}");
+    assert!(msg.contains("only 4 nodes"), "{msg}");
+}
+
+#[test]
+fn async_cluster_config_validation_is_actionable() {
+    let bad = AsyncClusterConfig { max_retries: 0, ..Default::default() };
+    let msg = format!("{}", bad.validate().unwrap_err());
+    assert!(msg.contains("hang"), "max_retries=0 would hang forever: {msg}");
+
+    let bad = AsyncClusterConfig {
+        checkpoint_dir: Some("/tmp/x".into()),
+        checkpoint_every: 0,
+        ..Default::default()
+    };
+    let msg = format!("{}", bad.validate().unwrap_err());
+    assert!(msg.contains("checkpoint_every"), "{msg}");
+
+    let bad = AsyncClusterConfig { msg_timeout_s: 0.0, ..Default::default() };
+    assert!(bad.validate().is_err());
+    let bad = AsyncClusterConfig { retry_backoff: 0.5, ..Default::default() };
+    assert!(bad.validate().is_err());
 }

@@ -1,0 +1,221 @@
+//! Property tests for the fault-injecting async cluster executor:
+//!
+//! 1. `tau = 0` + empty `FaultPlan` is **bitwise identical** to the
+//!    synchronous simulator, across worker counts.
+//! 2. A seeded `FaultPlan` replayed twice yields identical traces and
+//!    final state, event-for-event.
+//! 3. A crash at every checkpoint boundary recovers to the exact
+//!    pre-crash chain state (in-memory and on-disk checkpoints).
+//! 4. Recorded staleness never exceeds `tau` (enforced by the ledger,
+//!    re-asserted here from the outside).
+//! 5. Permuting event-queue tie-breaking never touches the chain: the
+//!    per-block RNG streams are keyed by `(seed, t, block)`, not by pop
+//!    order.
+
+use std::path::PathBuf;
+
+use psgld::cluster::{
+    psgld_distributed_async, psgld_distributed_full, AsyncSimReport, ComputeModel, CrashRule,
+    FaultPlan, FaultRates, NetworkModel, StragglerRule, TieBreak,
+};
+use psgld::config::{AsyncClusterConfig, RunConfig, StepSchedule};
+use psgld::data::movielens;
+use psgld::data::sparse::Csr;
+use psgld::model::NmfModel;
+
+const SEED: u64 = 2015;
+const T_TOTAL: u64 = 40;
+
+fn workload() -> (Csr, NmfModel, RunConfig) {
+    let csr = movielens::movielens_like_dims(48, 60, 900, 3, 13);
+    // mirror (Poisson) model: the async executor's nonneg fast path and
+    // the sync simulator's nonneg_hint agree unconditionally for mirror
+    // models, which the bitwise contract relies on.
+    let model = NmfModel::poisson(3).with_priors(2.0, 2.0);
+    let run = RunConfig::quick(T_TOTAL)
+        .with_step(StepSchedule::Polynomial { a: 0.01, b: 0.51 })
+        .with_monitor_every(5);
+    (csr, model, run)
+}
+
+fn run_async(
+    b: usize,
+    cfg: &AsyncClusterConfig,
+    plan: &FaultPlan,
+    tie: TieBreak,
+) -> AsyncSimReport {
+    let (csr, model, run) = workload();
+    let net = NetworkModel::paper_cluster();
+    let compute = ComputeModel::paper_node();
+    psgld_distributed_async(
+        &csr, &model, b, &run, SEED, &net, &compute, cfg, plan, tie,
+        |s| f64::from(s.w.as_slice().iter().sum::<f32>()),
+    )
+    .expect("async run")
+}
+
+fn assert_same_chain(a: &AsyncSimReport, b: &AsyncSimReport) {
+    assert_eq!(a.state.w, b.state.w, "W diverged");
+    assert_eq!(a.state.ht, b.state.ht, "H diverged");
+    assert_eq!(a.trace.iters, b.trace.iters, "trace iterations diverged");
+    assert_eq!(a.trace.values, b.trace.values, "trace values diverged");
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("psgld_fault_tests").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------- (1)
+
+#[test]
+fn tau_zero_no_faults_is_bitwise_identical_to_sync_simulator() {
+    let (csr, model, run) = workload();
+    let net = NetworkModel::paper_cluster();
+    let compute = ComputeModel::paper_node();
+    for b in [2usize, 3, 4] {
+        let sync = psgld_distributed_full(&csr, &model, b, &run, SEED, &net, &compute, |s| {
+            f64::from(s.w.as_slice().iter().sum::<f32>())
+        })
+        .expect("sync run");
+        let sync_state = sync.state.expect("full fidelity keeps state");
+        let sync_trace = sync.trace.expect("full fidelity keeps trace");
+
+        let rep = run_async(b, &AsyncClusterConfig::default(), &FaultPlan::empty(), TieBreak::Fifo);
+        assert_eq!(rep.state.w, sync_state.w, "B={b}: async W != sync W");
+        assert_eq!(rep.state.ht, sync_state.ht, "B={b}: async H != sync H");
+        assert_eq!(rep.trace.iters, sync_trace.iters, "B={b}: monitor points differ");
+        assert_eq!(rep.trace.values, sync_trace.values, "B={b}: monitor values differ");
+        assert_eq!(rep.iterations, T_TOTAL);
+        assert_eq!(rep.executed_iterations, T_TOTAL * b as u64, "no re-execution expected");
+        assert_eq!(rep.recoveries, 0);
+        assert_eq!(rep.ledger.max_staleness(), 0, "tau=0 must admit no staleness");
+    }
+}
+
+// ---------------------------------------------------------------- (2)
+
+#[test]
+fn seeded_fault_plan_replays_to_identical_traces() {
+    let b = 4;
+    let rates = FaultRates {
+        straggler_prob: 0.05,
+        crash_prob: 0.02,
+        drop_prob: 0.05,
+        delay_prob: 0.05,
+        ..Default::default()
+    };
+    let plan = FaultPlan::seeded(77, b, T_TOTAL, &rates);
+    assert!(!plan.is_empty(), "rates high enough to generate faults");
+    let cfg = AsyncClusterConfig::default().with_tau(4).with_checkpoint_every(8);
+
+    let a = run_async(b, &cfg, &plan, TieBreak::Fifo);
+    let c = run_async(b, &cfg, &plan, TieBreak::Fifo);
+    assert_same_chain(&a, &c);
+    // the whole run replays, not just the chain: virtual time, event
+    // counters and the staleness ledger are identical too
+    assert_eq!(a.trace.seconds, c.trace.seconds, "virtual-time trace diverged");
+    assert_eq!(a.virtual_seconds, c.virtual_seconds);
+    assert_eq!(a.executed_iterations, c.executed_iterations);
+    assert_eq!(a.recoveries, c.recoveries);
+    assert_eq!(a.messages_dropped, c.messages_dropped);
+    assert_eq!(a.retries, c.retries);
+    assert_eq!(a.ledger.records(), c.ledger.records());
+    assert_eq!(a.trace.node_stats, c.trace.node_stats);
+}
+
+// ---------------------------------------------------------------- (3)
+
+#[test]
+fn crash_at_every_checkpoint_boundary_recovers_exact_state() {
+    let b = 4;
+    let every = 8u64;
+    let baseline = run_async(
+        b,
+        &AsyncClusterConfig::default().with_checkpoint_every(every),
+        &FaultPlan::empty(),
+        TieBreak::Fifo,
+    );
+
+    // one crash right after each checkpoint boundary (t = c + 1), plus
+    // one before any checkpoint exists (rolls back to the init state)
+    let crashes: Vec<CrashRule> = (0..T_TOTAL / every)
+        .map(|i| CrashRule { node: (i as usize) % b, at_t: i * every + 1 })
+        .collect();
+    let plan = FaultPlan { crashes, ..Default::default() };
+    let cfg = AsyncClusterConfig::default().with_checkpoint_every(every);
+    let rep = run_async(b, &cfg, &plan, TieBreak::Fifo);
+    assert_eq!(rep.recoveries, (T_TOTAL / every), "every crash rule must fire once");
+    assert!(
+        rep.executed_iterations >= T_TOTAL * b as u64,
+        "rollback must never lose delivered iterations"
+    );
+    // at tau = 0 the replay after rollback is bitwise, so the final
+    // chain equals the crash-free run exactly
+    assert_same_chain(&baseline, &rep);
+
+    // same contract when recovery goes through a checkpoint on disk
+    let dir = tmp("boundary_crashes");
+    let cfg_disk = AsyncClusterConfig::default()
+        .with_checkpoint_every(every)
+        .with_checkpoint_dir(dir.to_str().unwrap());
+    let rep_disk = run_async(b, &cfg_disk, &plan, TieBreak::Fifo);
+    assert_same_chain(&baseline, &rep_disk);
+    assert!(rep_disk.checkpoints_taken >= T_TOTAL / every);
+}
+
+// ---------------------------------------------------------------- (4)
+
+#[test]
+fn staleness_never_exceeds_tau() {
+    let b = 4;
+    // under the cyclic ring a node's cached stripe is either fresh or a
+    // whole ring lap old (staleness B - 1), so tau = B admits every
+    // attainable lap-stale update — the genuinely asynchronous regime
+    let tau = b as u64;
+    let plan = FaultPlan {
+        stragglers: vec![StragglerRule { node: 0, from_t: 1, to_t: T_TOTAL, factor: 50.0 }],
+        ..Default::default()
+    };
+    let cfg = AsyncClusterConfig::default().with_tau(tau);
+    let rep = run_async(b, &cfg, &plan, TieBreak::Fifo);
+    let max = rep.ledger.max_staleness();
+    assert!(max <= tau, "ledger recorded staleness {max} > tau {tau}");
+    assert!(max > 0, "a 50x straggler must force the fast nodes onto stale blocks");
+    assert!(
+        rep.trace.node_stats.iter().any(|n| n.stalls > 0),
+        "the bound must also bite: someone has to stall at tau"
+    );
+    for n in &rep.trace.node_stats {
+        assert!(n.max_staleness <= tau, "node {} exceeded tau", n.node);
+    }
+    assert_eq!(rep.iterations, T_TOTAL, "bounded staleness still completes the run");
+}
+
+// ---------------------------------------------------------------- (5)
+
+#[test]
+fn event_tie_breaking_cannot_touch_the_chain() {
+    let b = 4;
+    let rates = FaultRates {
+        straggler_prob: 0.1,
+        delay_prob: 0.1,
+        crash_prob: 0.0,
+        drop_prob: 0.0,
+        ..Default::default()
+    };
+    let plan = FaultPlan::seeded(31, b, T_TOTAL, &rates);
+    let cfg = AsyncClusterConfig::default().with_tau(b as u64).with_checkpoint_every(8);
+
+    let reference = run_async(b, &cfg, &plan, TieBreak::Fifo);
+    for tie in [TieBreak::Lifo, TieBreak::NodeDesc, TieBreak::Hashed(1), TieBreak::Hashed(2)] {
+        let rep = run_async(b, &cfg, &plan, tie);
+        assert_same_chain(&reference, &rep);
+        assert_eq!(
+            reference.ledger.records(),
+            rep.ledger.records(),
+            "{tie:?}: staleness observations must be pop-order invariant"
+        );
+    }
+}
