@@ -4,7 +4,12 @@
 //! iterations, blocked only by the bounded-staleness rule: node `i` may
 //! start iteration `t` as soon as its cached copy of the `H` stripe it
 //! needs (`perm_t[i]`) is at most `tau` iterations stale; past the
-//! bound it stalls until the ring hand-off arrives. A [`FaultPlan`]
+//! bound it stalls until a fresher ring hand-off arrives. Staleness is
+//! *content lineage*, not recency: each cached copy counts the block
+//! updates baked into it, executing on a copy deepens its lineage by
+//! one, and staleness is how many updates short of the chain front the
+//! consumed copy was — so reusing a lap-old copy accrues a whole lap of
+//! staleness every lap, rather than resetting to fresh. A [`FaultPlan`]
 //! injects straggler slowdowns, crashes (with coordinated rollback to
 //! the last consistent checkpoint) and ring-message drops/delays, all
 //! keyed by logical coordinates so every run replays exactly.
@@ -88,7 +93,11 @@ pub struct AsyncSimReport {
 /// A node's cached copy of one `H` column-stripe.
 #[derive(Clone, Debug)]
 struct CacheEntry {
-    /// Iteration the content reflects (monotone).
+    /// Lineage depth: how many block updates are baked into `data`.
+    /// Bumped by one on every execution against this copy; replaced by
+    /// max-merge when a ring message with a deeper lineage arrives.
+    /// Staleness of a consumption at iteration `t` is `(t-1) - version`
+    /// — how many updates short of the chain front the copy is.
     version: u64,
     /// `cols × K`, row-major.
     data: Vec<f32>,
@@ -152,6 +161,10 @@ struct AsyncSim<'a> {
     scratch: Vec<(Vec<f32>, Vec<f32>)>,
     arena: ScratchArena,
     part_buf: Part,
+    /// In-flight iteration snapshots. Bounded: lineage staleness grows
+    /// with lead, so the `tau` bound stalls any node more than
+    /// ~`B * (tau + 1)` iterations ahead of the slowest one, and at
+    /// most that many slots are ever open.
     slots: BTreeMap<u64, Slot>,
     trace: Trace,
     ledger: StalenessLedger,
@@ -243,8 +256,14 @@ impl AsyncSim<'_> {
             &mut sb.1[..n * k],
             &mut self.arena,
         );
-        // Monotone even if a future version lapped us while stalled.
-        entry.version = entry.version.max(t - 1) + 1;
+        // Content lineage: exactly one more update is baked into this
+        // copy than before — stale content does NOT become fresh by
+        // being updated. A lap-old reuse therefore stays a lap behind,
+        // staleness accumulates across stale executions, and because a
+        // copy that keeps bypassing the slowest producer keeps losing
+        // lineage, the tau bound also caps how far fast nodes can run
+        // ahead (and with it the number of in-flight `slots`).
+        entry.version += 1;
 
         let slot = self
             .slots
@@ -340,8 +359,11 @@ impl AsyncSim<'_> {
         Ok(())
     }
 
-    /// Deliver a ring message: version-checked cache replace, then wake
-    /// the receiver if it was stalled on this stripe.
+    /// Deliver a ring message: the deeper lineage wins the cache (a
+    /// late message from a slow producer whose updates were already
+    /// bypassed is superseded and dropped — that divergence is the
+    /// price of proceeding stale), then wake the receiver if it was
+    /// stalled on this stripe and the merged copy satisfies the bound.
     fn on_msg(&mut self, msg: Msg) -> Result<()> {
         let entry = &mut self.cache[msg.to][msg.block];
         if msg.version > entry.version {
@@ -400,7 +422,13 @@ impl AsyncSim<'_> {
                     .extend_from_slice(&state.ht.as_slice()[cols.start * k..cols.end * k]);
             }
         }
-        for node in &mut self.nodes {
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            // A stall interrupted by the crash still happened: credit
+            // the accrued wait before resetting, or stall_seconds
+            // silently undercounts in faulty runs.
+            if let Some(st) = node.stalled {
+                self.stats[i].stall_seconds += self.now - st.since;
+            }
             if node.done {
                 self.done_count -= 1;
             }

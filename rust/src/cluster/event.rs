@@ -22,7 +22,8 @@ pub struct Msg {
     pub to: usize,
     /// Column-stripe index `0..B`.
     pub block: usize,
-    /// Chain version the payload reflects (monotone per stripe).
+    /// Lineage depth of the payload: how many block updates are baked
+    /// into it. Receivers keep whichever copy is deeper.
     pub version: u64,
     /// Iteration at which the payload was produced; fault rules for
     /// drops/delays are keyed on `(from, produced_at)`.

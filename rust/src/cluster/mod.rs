@@ -38,19 +38,29 @@
 //!   by a pluggable [`TieBreak`] policy that must never influence the
 //!   chain (only per-`(seed, t, block)` RNG streams do) — tests permute
 //!   the policy to pin this.
-//! * **Bounded staleness** ([`staleness`]): node `i` may start
-//!   iteration `t` while its cached `H` stripe is up to `tau`
-//!   iterations stale; past the bound it stalls until the hand-off
-//!   arrives. Under the cyclic ring a node revisits a stripe every `B`
-//!   iterations, so in steady state its cached copy is either fresh
-//!   (the hand-off arrived) or a whole ring lap old: attainable
-//!   staleness values are `0, B - 1, 2B - 1, …` (plus `1..B - 1`
-//!   transiently, inherited from the init copies). Hence small `tau`
-//!   behaves near-synchronously and `tau >= B - 1` admits genuinely
-//!   lap-stale updates — the regime the convergence tests exercise.
-//!   The [`StalenessLedger`] refuses to record a bound
-//!   violation, making "staleness never exceeds tau" an executor
-//!   invariant rather than a hope.
+//! * **Bounded staleness** ([`staleness`]): every cached stripe copy
+//!   carries a *lineage* version — the number of block updates baked
+//!   into its content. Executing on a copy deepens its lineage by one
+//!   (stale content does not become fresh by being updated), and an
+//!   arriving ring message replaces the cache only when it carries a
+//!   deeper lineage. Staleness of a consumption at iteration `t` is
+//!   `(t - 1) - version`: how many updates short of the chain front
+//!   the copy was. Node `i` may start iteration `t` while that
+//!   staleness is at most `tau`; past the bound it stalls until a
+//!   deeper copy arrives. Consequences: (a) hand-offs inherit their
+//!   producer's deficit and a lap-old reuse accrues a further
+//!   `B - 1`, so staleness *accumulates* across stale executions and
+//!   any fast node more than ~`B * (tau + 1)` iterations ahead of the
+//!   slowest producer is forced to stall — the bound simultaneously
+//!   caps bias (Chen et al. 2016), lead, and open-snapshot memory;
+//!   (b) a superseded slow producer's update can be dropped on merge
+//!   (its lineage is shallower than the branch that bypassed it) —
+//!   the usual divergence price of asynchrony. Small `tau` behaves
+//!   near-synchronously; `tau >= B - 1` admits genuinely lap-stale
+//!   updates — the regime the convergence tests exercise. The
+//!   [`StalenessLedger`] refuses to record a bound violation, making
+//!   "staleness never exceeds tau" an executor invariant rather than
+//!   a hope.
 //! * **Faults** ([`fault`]): a [`FaultPlan`] is a deterministic
 //!   schedule keyed by `(node, iteration)` — straggler windows multiply
 //!   compute time, crash rules trigger a coordinated rollback to the

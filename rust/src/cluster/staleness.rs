@@ -1,7 +1,8 @@
 //! Staleness accounting for bounded-staleness PSGLD.
 //!
 //! Every block update in the async executor records how stale the `H`
-//! stripe it consumed was (in iterations behind the freshest version).
+//! stripe it consumed was: how many block updates short of the chain
+//! front its content lineage ran (see `async_sim::CacheEntry`).
 //! The ledger *enforces* the bound — recording a violation is an error,
 //! not a statistic — so "staleness never exceeds `tau`" is checkable by
 //! construction and asserted again from the outside by the tests.

@@ -106,12 +106,13 @@ fn bounded_staleness_matches_synchronous_posterior_mean() {
     // posterior-mean RMSE of the reconstruction must stay within a
     // tolerance band of the synchronous chain for tau in {1, 4}.
     //
-    // Under the cyclic ring with B = 4 a node's cached copy of a stripe
-    // is either fresh or a whole ring lap old, so tau = 1 only admits
-    // staleness from the init copies (near-synchronous), while tau = 4
-    // = B admits genuinely lap-stale updates — the regime this test is
-    // really about. A permanent straggler makes sure the stale path is
-    // exercised rather than everyone keeping pace.
+    // Staleness is content lineage (it accumulates across stale
+    // executions): with B = 4, tau = 1 only admits the init-copy
+    // transient and hand-offs that inherit it, so the chain stays
+    // near-synchronous and paces the straggler from the first lap,
+    // while tau = 4 = B admits genuinely lap-stale reuse — the regime
+    // this test is really about. A permanent straggler makes sure the
+    // stale path is exercised rather than everyone keeping pace.
     let b = 4;
     let model = NmfModel::poisson(3);
     let data = synth::poisson_nmf(16, 16, &model, 321);

@@ -170,9 +170,12 @@ fn crash_at_every_checkpoint_boundary_recovers_exact_state() {
 #[test]
 fn staleness_never_exceeds_tau() {
     let b = 4;
-    // under the cyclic ring a node's cached stripe is either fresh or a
-    // whole ring lap old (staleness B - 1), so tau = B admits every
-    // attainable lap-stale update — the genuinely asynchronous regime
+    // Staleness is content lineage and accumulates: against a permanent
+    // straggler a fast node consumes its init copy at staleness 1 on
+    // the first lap, its own lap-old copy at staleness B = 4 on the
+    // second, and would hit 2B - 1 = 7 > tau on the third — so with
+    // tau = B the stale path is exercised (max > 0) AND the bound bites
+    // (stalls > 0) in the same run.
     let tau = b as u64;
     let plan = FaultPlan {
         stragglers: vec![StragglerRule { node: 0, from_t: 1, to_t: T_TOTAL, factor: 50.0 }],
