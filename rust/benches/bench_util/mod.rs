@@ -98,3 +98,17 @@ impl JsonSink {
         }
     }
 }
+
+/// Write the per-run observability summary (phase totals + counters) to
+/// `file` at the repo root — a no-op when `PALLAS_OBS` is off so bench
+/// timings stay uninstrumented by default.
+pub fn write_obs_summary(file: &str) {
+    if psgld::obs::level() == psgld::obs::ObsLevel::Off {
+        return;
+    }
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(file);
+    match psgld::obs::write_summary(&path) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

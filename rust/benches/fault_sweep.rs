@@ -179,4 +179,13 @@ fn main() {
         Ok(()) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
     }
+
+    // Per-node counters of the fault-free baseline, one JSON object per
+    // line (schema documented on `Trace::write_node_stats_jsonl`).
+    let nodes_path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_fault_nodes.jsonl");
+    match base.trace.write_node_stats_jsonl(&nodes_path) {
+        Ok(()) => println!("wrote {}", nodes_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", nodes_path.display()),
+    }
 }

@@ -11,7 +11,7 @@
 //! Run: `cargo bench --bench fig5_movielens`
 
 mod bench_util;
-use bench_util::{header, report, time_it, JsonSink};
+use bench_util::{header, report, time_it, write_obs_summary, JsonSink};
 
 use psgld::config::{RunConfig, StepSchedule};
 use psgld::data::movielens;
@@ -151,4 +151,5 @@ fn main() {
     json.push("sparse_grads/coo_to_csr_simd_speedup", 1.0 / speedup, Some((1.0, "x")), 1);
 
     json.write();
+    write_obs_summary("BENCH_fig5_obs.json");
 }

@@ -47,6 +47,7 @@ use crate::data::sparse::{BlockedSparse, Csr};
 use crate::linalg::Mat;
 use crate::metrics::{NodeStats, Trace};
 use crate::model::NmfModel;
+use crate::obs::{self, Counter, ObsLevel, VtEvent};
 use crate::partition::{part_at_iter, GridPartition, Part};
 use crate::rng::Rng;
 use crate::samplers::{sparse_block_langevin, FactorState};
@@ -88,6 +89,10 @@ pub struct AsyncSimReport {
     pub state: FactorState,
     /// Full staleness log of the surviving (post-rollback) chain.
     pub ledger: StalenessLedger,
+    /// Virtual-time timeline slices (compute / stall / comms /
+    /// rollback / checkpoint per node), collected only when
+    /// `PALLAS_OBS=full`; feed to [`crate::obs::write_chrome_trace`].
+    pub vt_events: Vec<VtEvent>,
 }
 
 /// A node's cached copy of one `H` column-stripe.
@@ -183,6 +188,10 @@ struct AsyncSim<'a> {
     checkpoints_taken: u64,
     recoveries: u64,
     executed: u64,
+    /// Sampled once at construction: collect virtual-time slices?
+    /// (Never re-read mid-run, so a level flip cannot skew a run.)
+    vt_on: bool,
+    vt: Vec<VtEvent>,
 }
 
 impl AsyncSim<'_> {
@@ -213,6 +222,7 @@ impl AsyncSim<'_> {
         if staleness > self.cfg.tau {
             self.nodes[i].stalled = Some(Stall { since: self.now, block: j });
             self.stats[i].stalls += 1;
+            obs::counter_add(Counter::Stalls, 1);
             return Ok(());
         }
         self.ledger.record(i, t, staleness)?;
@@ -280,6 +290,15 @@ impl AsyncSim<'_> {
         let dur = base * self.plan.slowdown(i, t);
         self.busy_s += dur;
         self.queue.push(self.now + dur, EventKind::NodeFinish { node: i, t });
+        if self.vt_on {
+            self.vt.push(VtEvent {
+                name: "compute",
+                cat: "kernel",
+                track: i as u32,
+                start_s: self.now,
+                dur_s: dur,
+            });
+        }
     }
 
     /// Node `i` finished the compute phase of iteration `t`: complete
@@ -324,6 +343,7 @@ impl AsyncSim<'_> {
                     data: entry.data.clone(),
                 };
                 self.stats[i].msgs_sent += 1;
+                obs::counter_add(Counter::MsgsSent, 1);
                 self.send(msg)?;
             }
         }
@@ -336,6 +356,16 @@ impl AsyncSim<'_> {
         let drops = self.plan.drop_count(msg.from, msg.produced_at);
         if msg.attempt < drops {
             self.stats[msg.from].msgs_dropped += 1;
+            obs::counter_add(Counter::MsgsDropped, 1);
+            if self.vt_on {
+                self.vt.push(VtEvent {
+                    name: "msg_dropped",
+                    cat: "comms",
+                    track: msg.from as u32,
+                    start_s: self.now,
+                    dur_s: 0.0,
+                });
+            }
             if msg.attempt >= self.cfg.max_retries {
                 return Err(Error::Runtime(format!(
                     "ring message from node {} (iteration {}) was dropped {} times, \
@@ -355,7 +385,17 @@ impl AsyncSim<'_> {
         let bytes = msg.data.len() * std::mem::size_of::<f32>();
         let latency = self.net.ring_exchange_s(self.b, bytes)
             + self.plan.extra_delay(msg.from, msg.produced_at);
+        let from = msg.from;
         self.queue.push(self.now + latency, EventKind::MsgArrive(msg));
+        if self.vt_on {
+            self.vt.push(VtEvent {
+                name: "msg",
+                cat: "comms",
+                track: from as u32,
+                start_s: self.now,
+                dur_s: latency,
+            });
+        }
         Ok(())
     }
 
@@ -377,6 +417,15 @@ impl AsyncSim<'_> {
                 let staleness = (t - 1).saturating_sub(self.cache[msg.to][msg.block].version);
                 if staleness <= self.cfg.tau {
                     self.stats[msg.to].stall_seconds += self.now - st.since;
+                    if self.vt_on {
+                        self.vt.push(VtEvent {
+                            name: "stall",
+                            cat: "stall",
+                            track: msg.to as u32,
+                            start_s: st.since,
+                            dur_s: self.now - st.since,
+                        });
+                    }
                     self.nodes[msg.to].stalled = None;
                     self.try_start(msg.to)?;
                 }
@@ -391,6 +440,16 @@ impl AsyncSim<'_> {
     fn rollback(&mut self, crashed: usize) -> Result<()> {
         self.recoveries += 1;
         self.stats[crashed].recoveries += 1;
+        obs::counter_add(Counter::Rollbacks, 1);
+        if self.vt_on {
+            self.vt.push(VtEvent {
+                name: "rollback",
+                cat: "rollback",
+                track: crashed as u32,
+                start_s: self.now,
+                dur_s: self.cfg.restart_delay_s,
+            });
+        }
         // Restore through the on-disk path when one exists (exercising
         // Checkpoint::load), else from the in-memory snapshot.
         let (c, state) = if self.ckpt_on_disk {
@@ -428,6 +487,15 @@ impl AsyncSim<'_> {
             // silently undercounts in faulty runs.
             if let Some(st) = node.stalled {
                 self.stats[i].stall_seconds += self.now - st.since;
+                if self.vt_on {
+                    self.vt.push(VtEvent {
+                        name: "stall",
+                        cat: "stall",
+                        track: i as u32,
+                        start_s: st.since,
+                        dur_s: self.now - st.since,
+                    });
+                }
             }
             if node.done {
                 self.done_count -= 1;
@@ -479,6 +547,16 @@ impl AsyncSim<'_> {
                 }
                 self.last_ckpt = (t, state.clone());
                 self.checkpoints_taken += 1;
+                obs::counter_add(Counter::Checkpoints, 1);
+                if self.vt_on {
+                    self.vt.push(VtEvent {
+                        name: "checkpoint",
+                        cat: "checkpoint",
+                        track: 0,
+                        start_s: slot.time,
+                        dur_s: 0.0,
+                    });
+                }
             }
             if t == self.run.t_total {
                 self.final_state = Some(state);
@@ -577,6 +655,8 @@ pub fn psgld_distributed_async(
         checkpoints_taken: 0,
         recoveries: 0,
         executed: 0,
+        vt_on: obs::level() == ObsLevel::Full,
+        vt: Vec::new(),
     };
 
     // Kick off every node (guarding against an immediate crash rule at
@@ -615,6 +695,16 @@ pub fn psgld_distributed_async(
             EventKind::MsgArrive(msg) => sim.on_msg(msg)?,
             EventKind::RetryTimer(msg) => {
                 sim.stats[msg.from].retries += 1;
+                obs::counter_add(Counter::Retries, 1);
+                if sim.vt_on {
+                    sim.vt.push(VtEvent {
+                        name: "retry",
+                        cat: "comms",
+                        track: msg.from as u32,
+                        start_s: sim.now,
+                        dur_s: 0.0,
+                    });
+                }
                 sim.send(msg)?;
             }
             EventKind::RestartDone => sim.on_restart()?,
@@ -648,6 +738,7 @@ pub fn psgld_distributed_async(
         trace: sim.trace,
         state,
         ledger: sim.ledger,
+        vt_events: sim.vt,
     })
 }
 

@@ -107,13 +107,13 @@ pub fn b_sensitivity(opts: &ExpOptions) -> Result<()> {
         &["B", "post-burn-in loglik", "time"],
         &rows,
     );
-    println!("  note: per iteration PSGLD touches N/B entries, so larger B is\n  cheaper per iteration but needs B iterations per data sweep.");
+    crate::log_info!("  note: per iteration PSGLD touches N/B entries, so larger B is\n  cheaper per iteration but needs B iterations per data sweep.");
     Ok(())
 }
 
 pub fn backend_ablation(opts: &ExpOptions) -> Result<()> {
     if !opts.has_artifacts() {
-        println!("  (skipped: run `make artifacts` for the HLO backend)");
+        crate::log_warn!("  (skipped: run `make artifacts` for the HLO backend)");
         return Ok(());
     }
     let model = NmfModel::poisson(16);

@@ -22,6 +22,9 @@ pub struct ExpOptions {
     pub iters: Option<u64>,
     /// Include the Gibbs comparator at large sizes (slow).
     pub gibbs: bool,
+    /// Write a Chrome/Perfetto trace-event JSON here after the run
+    /// (implies `PALLAS_OBS=full` unless the env var says otherwise).
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ExpOptions {
@@ -33,6 +36,7 @@ impl Default for ExpOptions {
             full: false,
             iters: None,
             gibbs: true,
+            trace_out: None,
         }
     }
 }
@@ -56,7 +60,7 @@ impl ExpOptions {
 
 /// Print an aligned two-column-plus table, paper-style.
 pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
-    println!("\n== {title} ==");
+    crate::log_info!("\n== {title} ==");
     let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
     for row in rows {
         for (i, cell) in row.iter().enumerate() {
@@ -68,7 +72,7 @@ pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
         for (i, c) in cells.iter().enumerate() {
             s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
         }
-        println!("  {}", s.trim_end());
+        crate::log_info!("  {}", s.trim_end());
     };
     line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
     line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
@@ -80,7 +84,7 @@ pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
 /// Write a set of traces as one CSV and report where.
 pub fn save_traces(path: &Path, traces: &[&Trace]) -> Result<()> {
     crate::metrics::trace::write_csv_multi(traces, path)?;
-    println!("  wrote {}", path.display());
+    crate::log_info!("  wrote {}", path.display());
     Ok(())
 }
 

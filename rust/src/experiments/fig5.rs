@@ -41,7 +41,7 @@ pub fn fig5(opts: &ExpOptions) -> Result<Vec<Fig5Row>> {
     let t = opts.t(300, 1_000);
     let scale = if opts.full { 1.0 } else { 0.08 };
     let (csr, source) = load_or_generate(scale, k, opts.seed);
-    println!(
+    crate::log_info!(
         "  dataset: {source}: {} x {} with {} ratings",
         csr.rows(),
         csr.cols(),
@@ -94,7 +94,7 @@ pub fn fig5(opts: &ExpOptions) -> Result<Vec<Fig5Row>> {
         &["method", "time", "final RMSE"],
         &table,
     );
-    println!(
+    crate::log_info!(
         "  paper's claim: PSGLD converges like DSGD at the same speed; \
          time ratio psgld/dsgd = {:.2}",
         rows[0].seconds / rows[1].seconds.max(1e-12)

@@ -38,7 +38,7 @@ fn write_csv(path: &std::path::Path, rows: &[ScalingRow]) -> Result<()> {
             r.b, r.workload_nnz, r.total_s, r.compute_s, r.comm_s
         )?;
     }
-    println!("  wrote {}", path.display());
+    crate::log_info!("  wrote {}", path.display());
     Ok(())
 }
 
@@ -85,7 +85,7 @@ pub fn fig6a(opts: &ExpOptions) -> Result<Vec<ScalingRow>> {
         .windows(2)
         .find(|w| w[1].total_s > w[0].total_s)
         .map(|w| w[1].b);
-    println!(
+    crate::log_info!(
         "  knee (communication dominates) at B = {:?} — paper observed it at B = 120",
         knee
     );
@@ -130,7 +130,7 @@ pub fn fig6b(opts: &ExpOptions) -> Result<Vec<ScalingRow>> {
         &["nodes", "nnz", "total", "vs 15 nodes"],
         &table,
     );
-    println!(
+    crate::log_info!(
         "  paper's claim: 64x data on 8x nodes at nearly constant time; \
          measured growth {:.0}%",
         (rows.last().unwrap().total_s / rows[0].total_s - 1.0) * 100.0
@@ -167,7 +167,7 @@ pub fn comm_comparison(opts: &ExpOptions) -> Result<()> {
             ],
         ],
     );
-    println!(
+    crate::log_info!(
         "  comm ratio dsgld/psgld = {:.0}x (paper §1: PSGLD communicates only \
          small parts of H)",
         d.comm_seconds / p.comm_seconds.max(1e-12)

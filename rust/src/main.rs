@@ -27,6 +27,7 @@ COMMANDS:
     comm              DSGLD-vs-PSGLD communication comparison (§1 claim)
     ablations         schedule / mirroring / B / backend ablations
     all               every experiment in sequence
+    validate-trace PATH   schema-check a trace JSON written by --trace-out
     help              this text
 
 OPTIONS:
@@ -36,11 +37,20 @@ OPTIONS:
     --iters N         override iteration count
     --full            paper-scale runs (hours, not minutes)
     --no-gibbs        skip the Gibbs comparator
+    --trace-out PATH  write a Perfetto/Chrome trace-event JSON timeline
+                      (implies PALLAS_OBS=full unless PALLAS_OBS is set)
+
+ENVIRONMENT:
+    PALLAS_OBS        off | counters | full   instrumentation level [off]
+    PALLAS_LOG        off | error | warn | info | debug   log level [info]
+    PALLAS_THREADS    worker pool width (0/1 = sequential)
+    PALLAS_SIMD       scalar | avx2 | auto    kernel dispatch tier [auto]
 
 EXAMPLES:
     psgld quickstart
     psgld fig2a --iters 1000
     psgld fig5 --full --out results/full
+    PALLAS_OBS=full psgld fig5 --iters 30 --trace-out results/fig5_trace.json
 ";
 
 fn parse_opts(args: &[String]) -> Result<ExpOptions, String> {
@@ -75,6 +85,11 @@ fn parse_opts(args: &[String]) -> Result<ExpOptions, String> {
             }
             "--full" => opts.full = true,
             "--no-gibbs" => opts.gibbs = false,
+            "--trace-out" => {
+                opts.trace_out = Some(PathBuf::from(
+                    it.next().ok_or_else(|| "--trace-out needs a value".to_string())?,
+                ))
+            }
             other => return Err(format!("unknown option '{other}'")),
         }
     }
@@ -88,7 +103,7 @@ fn quickstart(opts: &ExpOptions) -> psgld::Result<()> {
     use psgld::model::NmfModel;
     use psgld::samplers::{run_sampler, Psgld};
 
-    println!("PSGLD quickstart: 128x128 Poisson-NMF, K=16, B=4");
+    psgld::log_info!("PSGLD quickstart: 128x128 Poisson-NMF, K=16, B=4");
     let model = NmfModel::poisson(16);
     let data = synth::poisson_nmf(128, 128, &model, opts.seed);
     let t = opts.t(400, 2_000);
@@ -99,7 +114,7 @@ fn quickstart(opts: &ExpOptions) -> psgld::Result<()> {
     let res = run_sampler(&mut native, &run, |s| {
         model.loglik_dense(&s.w, &s.h(), &data.v)
     });
-    println!(
+    psgld::log_info!(
         "  native : loglik {:.4e} -> {:.4e} in {:.2}s ({} samples, {} post-burn-in)",
         res.trace.values[0],
         res.trace.last_value(),
@@ -114,15 +129,40 @@ fn quickstart(opts: &ExpOptions) -> psgld::Result<()> {
         let res = run_sampler(&mut hlo, &run, |s| {
             model.loglik_dense(&s.w, &s.h(), &data.v)
         });
-        println!(
+        psgld::log_info!(
             "  hlo    : loglik {:.4e} -> {:.4e} in {:.2}s (one PJRT dispatch/iter)",
             res.trace.values[0],
             res.trace.last_value(),
             res.sampling_seconds,
         );
     } else {
-        println!("  (HLO backend skipped: run `make artifacts`)");
+        psgld::log_info!("  (HLO backend skipped: run `make artifacts`)");
     }
+    Ok(())
+}
+
+/// `validate-trace PATH`: parse a trace JSON and run the schema check.
+fn validate_trace_cmd(path: &str) -> psgld::Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let parsed = psgld::util::Json::parse(&text)?;
+    psgld::obs::validate_trace(&parsed)?;
+    println!("{path}: valid trace ({} bytes)", text.len());
+    Ok(())
+}
+
+/// Write the observability artifacts after a run: the Perfetto trace
+/// (when `--trace-out` was given) and the per-run summary JSON.
+fn write_obs_artifacts(opts: &ExpOptions) -> psgld::Result<()> {
+    if psgld::obs::level() == psgld::obs::ObsLevel::Off {
+        return Ok(());
+    }
+    if let Some(trace_path) = &opts.trace_out {
+        psgld::obs::write_chrome_trace(trace_path, &[])?;
+        println!("  wrote {}", trace_path.display());
+    }
+    let summary = opts.outdir.join("obs_summary.json");
+    psgld::obs::write_summary(&summary)?;
+    println!("  wrote {}", summary.display());
     Ok(())
 }
 
@@ -166,6 +206,7 @@ fn dispatch(cmd: &str, opts: &ExpOptions) -> psgld::Result<()> {
             std::process::exit(2);
         }
     }
+    write_obs_artifacts(opts)?;
     Ok(())
 }
 
@@ -179,6 +220,19 @@ fn main() -> ExitCode {
         println!("{HELP}");
         return ExitCode::SUCCESS;
     }
+    if cmd == "validate-trace" {
+        let Some(path) = args.get(1) else {
+            eprintln!("error: validate-trace needs a PATH argument\n\n{HELP}");
+            return ExitCode::from(2);
+        };
+        return match validate_trace_cmd(path) {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                eprintln!("error: {path}: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
     let opts = match parse_opts(&args[1..]) {
         Ok(o) => o,
         Err(e) => {
@@ -186,6 +240,9 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+    if opts.trace_out.is_some() && std::env::var_os("PALLAS_OBS").is_none() {
+        psgld::obs::set_level_override(Some(psgld::obs::ObsLevel::Full));
+    }
     match dispatch(cmd, &opts) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {

@@ -176,6 +176,40 @@ mod tests {
     }
 
     #[test]
+    fn geweke_short_and_constant_contracts() {
+        // fewer than 20 samples cannot support the batch-means variance
+        // estimate: the contract is NaN, not a spurious z-score
+        assert!(geweke_z(&[], 0.1, 0.5).is_nan());
+        assert!(geweke_z(&[1.0; 19], 0.1, 0.5).is_nan());
+        // a constant chain has equal window means: exactly zero
+        assert_eq!(geweke_z(&[3.5; 64], 0.1, 0.5), 0.0);
+    }
+
+    #[test]
+    fn iat_constant_and_trend_contracts() {
+        // constant chain: zero variance short-circuits the ACF to
+        // lag0-only, so tau is exactly the iid value
+        assert_eq!(integrated_autocorr_time(&[2.0; 100]), 1.0);
+        // a deterministic trend is maximally correlated: tau grows with n
+        let trend: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert!(integrated_autocorr_time(&trend) > 100.0);
+        // degenerate inputs fall back to tau = 1
+        assert_eq!(integrated_autocorr_time(&[]), 1.0);
+        assert_eq!(integrated_autocorr_time(&[7.0]), 1.0);
+    }
+
+    #[test]
+    fn acf_degenerate_lengths() {
+        assert_eq!(autocorrelation(&[], 5), vec![1.0]);
+        assert_eq!(autocorrelation(&[4.2], 5), vec![1.0]);
+        // n = 2: max_lag clamps to 1 and acf(1) = -1/2 exactly
+        let acf = autocorrelation(&[1.0, 2.0], 5);
+        assert_eq!(acf.len(), 2);
+        assert!((acf[0] - 1.0).abs() < 1e-12);
+        assert!((acf[1] + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
     fn rhat_near_one_for_same_target() {
         let chains = vec![iid(6, 3000), iid(7, 3000), iid(8, 3000)];
         let r = gelman_rubin(&chains);

@@ -144,6 +144,54 @@ impl Trace {
         }
         Ok(())
     }
+
+    /// Write the per-node robustness counters as JSON Lines: one JSON
+    /// object per node per line, so `BENCH_fault.json`-style tooling
+    /// can consume them without CSV parsing.
+    ///
+    /// Schema (every field always present, one object per node):
+    ///
+    /// ```json
+    /// {"node": 0, "iterations": 40, "stalls": 3, "stall_seconds": 0.25,
+    ///  "recoveries": 1, "msgs_sent": 39, "msgs_dropped": 2, "retries": 2,
+    ///  "max_staleness": 2, "mean_staleness": 0.5}
+    /// ```
+    ///
+    /// Integer fields are JSON integers; `stall_seconds` and
+    /// `mean_staleness` are JSON numbers (`null` if non-finite, which
+    /// can only happen on a zero-iteration node).
+    pub fn write_node_stats_jsonl(&self, path: &Path) -> Result<()> {
+        fn jnum(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x}")
+            } else {
+                "null".to_string()
+            }
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for s in &self.node_stats {
+            writeln!(
+                f,
+                "{{\"node\":{},\"iterations\":{},\"stalls\":{},\"stall_seconds\":{},\
+                 \"recoveries\":{},\"msgs_sent\":{},\"msgs_dropped\":{},\"retries\":{},\
+                 \"max_staleness\":{},\"mean_staleness\":{}}}",
+                s.node,
+                s.iterations,
+                s.stalls,
+                jnum(s.stall_seconds),
+                s.recoveries,
+                s.msgs_sent,
+                s.msgs_dropped,
+                s.retries,
+                s.max_staleness,
+                jnum(s.mean_staleness)
+            )?;
+        }
+        Ok(())
+    }
 }
 
 /// Write several traces side by side (outer join on iteration).
@@ -275,6 +323,49 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("node,iterations,stalls"));
         assert!(text.contains("1,40,3,0.25,1,39,2,2,2,0.5"));
+    }
+
+    #[test]
+    fn node_stats_jsonl() {
+        let dir = std::env::temp_dir().join("psgld_trace_test");
+        let path = dir.join("nodes.jsonl");
+        let mut t = Trace::new("async");
+        t.node_stats.push(NodeStats {
+            node: 1,
+            iterations: 40,
+            stalls: 3,
+            stall_seconds: 0.25,
+            recoveries: 1,
+            msgs_sent: 39,
+            msgs_dropped: 2,
+            retries: 2,
+            max_staleness: 2,
+            mean_staleness: 0.5,
+        });
+        t.node_stats.push(NodeStats {
+            node: 2,
+            iterations: 0,
+            stalls: 0,
+            stall_seconds: 0.0,
+            recoveries: 0,
+            msgs_sent: 0,
+            msgs_dropped: 0,
+            retries: 0,
+            max_staleness: 0,
+            mean_staleness: f64::NAN,
+        });
+        t.write_node_stats_jsonl(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j0 = crate::util::Json::parse(lines[0]).unwrap();
+        assert_eq!(j0.field("node").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j0.field("iterations").unwrap().as_u64().unwrap(), 40);
+        assert!((j0.field("stall_seconds").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(j0.field("msgs_dropped").unwrap().as_u64().unwrap(), 2);
+        // non-finite mean_staleness must serialise as null, not break the line
+        let j1 = crate::util::Json::parse(lines[1]).unwrap();
+        assert!(matches!(j1.field("mean_staleness").unwrap(), crate::util::Json::Null));
     }
 
     #[test]

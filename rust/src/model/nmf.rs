@@ -64,7 +64,7 @@ impl NmfModel {
             // no Tweedie model exists for 1 < beta < 2 (p in (0,1));
             // the beta-divergence cost is still usable for MAP-style runs
             // but sampling synthetic data from it is undefined.
-            eprintln!(
+            crate::log_warn!(
                 "warning: no Tweedie distribution exists for beta in (1,2); \
                  proceeding with the divergence only"
             );

@@ -1,0 +1,262 @@
+//! Trace and summary exporters.
+//!
+//! [`write_chrome_trace`] emits the Chrome trace-event JSON format
+//! (the `traceEvents` array of `"ph":"X"` complete slices), which
+//! Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing` load
+//! directly. Two synthetic processes separate the clock domains:
+//!
+//! * `pid 0` — wall clock; one track (`tid`) per OS thread that
+//!   recorded spans, named after the thread.
+//! * `pid 1` — the async cluster simulator's **virtual time**; one
+//!   track per simulated node, with compute / stall / comms /
+//!   rollback / checkpoint slices ([`VtEvent`]).
+//!
+//! Timestamps are microseconds as the format requires. Virtual-time
+//! slices reuse the same unit, so "1 ms" on a cluster track means one
+//! simulated millisecond.
+//!
+//! [`write_summary`] emits a small per-run JSON next to the CSVs:
+//! per-phase totals and histogram quantiles plus the event counters.
+//! [`validate_trace`] is the schema check used by tests and the CLI
+//! `validate-trace` subcommand.
+
+use std::path::Path;
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::metrics::{snapshot, Counter, MetricsSnapshot};
+use super::{level, span, Phase};
+
+/// One slice on a virtual-time track (async cluster simulator). Times
+/// are simulated seconds; `track` is the node index.
+#[derive(Clone, Copy, Debug)]
+pub struct VtEvent {
+    /// Slice label (`"compute"`, `"stall"`, `"msg"`, ...).
+    pub name: &'static str,
+    /// Taxonomy phase name used as the trace `cat` (must be one of
+    /// [`Phase::name`]'s values — [`validate_trace`] enforces this).
+    pub cat: &'static str,
+    /// Simulated node index (one Perfetto track per node).
+    pub track: u32,
+    pub start_s: f64,
+    pub dur_s: f64,
+}
+
+fn slice(name: &str, cat: &str, pid: u32, tid: u32, ts_us: f64, dur_us: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("cat", Json::str(cat)),
+        ("ph", Json::str("X")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(tid)),
+        ("ts", Json::num(ts_us)),
+        ("dur", Json::num(dur_us)),
+    ])
+}
+
+fn metadata(kind: &str, pid: u32, tid: Option<u32>, label: &str) -> Json {
+    let mut pairs = vec![
+        ("name", Json::str(kind)),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid)),
+        ("args", Json::obj(vec![("name", Json::str(label))])),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", Json::num(t)));
+    }
+    Json::obj(pairs)
+}
+
+/// Drain all buffered wall-clock spans, merge in the given
+/// virtual-time slices, and write a Perfetto-loadable trace JSON.
+pub fn write_chrome_trace(path: &Path, vt_events: &[VtEvent]) -> Result<()> {
+    let (events, names) = span::drain_events();
+    let mut list: Vec<Json> = Vec::new();
+
+    list.push(metadata("process_name", 0, None, "wall-clock"));
+    for (tid, name) in &names {
+        list.push(metadata("thread_name", 0, Some(*tid), name));
+    }
+    if !vt_events.is_empty() {
+        list.push(metadata("process_name", 1, None, "cluster-virtual-time"));
+        let mut tracks: Vec<u32> = vt_events.iter().map(|e| e.track).collect();
+        tracks.sort_unstable();
+        tracks.dedup();
+        for t in tracks {
+            list.push(metadata("thread_name", 1, Some(t), &format!("node-{t}")));
+        }
+    }
+
+    for e in &events {
+        list.push(slice(
+            e.name,
+            e.phase.name(),
+            0,
+            e.tid,
+            e.start_ns as f64 / 1e3,
+            e.dur_ns as f64 / 1e3,
+        ));
+    }
+    for v in vt_events {
+        list.push(slice(v.name, v.cat, 1, v.track, v.start_s * 1e6, v.dur_s * 1e6));
+    }
+
+    let root = Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(list)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, root.to_string_compact())?;
+    Ok(())
+}
+
+/// Schema check for a trace produced by [`write_chrome_trace`]: a
+/// `traceEvents` array whose entries are either `"M"` metadata records
+/// or `"X"` complete slices with non-negative `ts`/`dur` and a `cat`
+/// from the span taxonomy. At least one slice must be present.
+pub fn validate_trace(trace: &Json) -> Result<()> {
+    let events = trace.field("traceEvents")?.as_arr()?;
+    let mut slices = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let ctx = |msg: String| Error::Config(format!("traceEvents[{i}]: {msg}"));
+        let ph = e.field("ph")?.as_str()?;
+        e.field("name")?.as_str()?;
+        e.field("pid")?.as_usize()?;
+        match ph {
+            "M" => {
+                e.field("args")?.field("name")?.as_str()?;
+            }
+            "X" => {
+                slices += 1;
+                e.field("tid")?.as_usize()?;
+                let ts = e.field("ts")?.as_f64()?;
+                let dur = e.field("dur")?.as_f64()?;
+                if !(ts >= 0.0 && ts.is_finite()) {
+                    return Err(ctx(format!("bad ts {ts}")));
+                }
+                if !(dur >= 0.0 && dur.is_finite()) {
+                    return Err(ctx(format!("bad dur {dur}")));
+                }
+                let cat = e.field("cat")?.as_str()?;
+                if !Phase::ALL.iter().any(|p| p.name() == cat) {
+                    return Err(ctx(format!("unknown category '{cat}'")));
+                }
+            }
+            other => return Err(ctx(format!("unknown ph '{other}'"))),
+        }
+    }
+    if slices == 0 {
+        return Err(Error::Config("trace contains no duration slices".into()));
+    }
+    Ok(())
+}
+
+fn phase_entry(s: &MetricsSnapshot, p: Phase) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.phase_count[p.idx()] as f64)),
+        ("total_s", Json::num(s.phase_seconds(p))),
+        ("p50_ns", Json::num(s.quantile_ns(p, 0.5))),
+        ("p90_ns", Json::num(s.quantile_ns(p, 0.9))),
+        ("p99_ns", Json::num(s.quantile_ns(p, 0.99))),
+    ])
+}
+
+/// Build the per-run summary (phase totals + quantiles + counters)
+/// from the current metrics snapshot.
+pub fn summary_json() -> Json {
+    let s = snapshot();
+    let phases = Phase::ALL.iter().map(|p| (p.name(), phase_entry(&s, *p))).collect();
+    let counters =
+        Counter::ALL.iter().map(|c| (c.name(), Json::num(s.counter(*c) as f64))).collect();
+    Json::obj(vec![
+        ("schema", Json::str("psgld-obs-summary/1")),
+        ("level", Json::str(level().name())),
+        ("phases", Json::obj(phases)),
+        ("counters", Json::obj(counters)),
+    ])
+}
+
+/// Write the per-run summary JSON (see [`summary_json`]).
+pub fn write_summary(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, summary_json().to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{set_level_override, ObsLevel, Span};
+
+    #[test]
+    fn trace_roundtrips_and_validates() {
+        let _g = crate::obs::test_guard();
+        set_level_override(Some(ObsLevel::Full));
+        span::clear_events();
+        {
+            let _s = Span::enter(Phase::Io, "export_test_span");
+        }
+        let vt = [
+            VtEvent { name: "compute", cat: "kernel", track: 0, start_s: 0.0, dur_s: 0.5 },
+            VtEvent { name: "stall", cat: "stall", track: 1, start_s: 0.25, dur_s: 0.1 },
+        ];
+        let dir = std::env::temp_dir().join("psgld_obs_export_test");
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &vt).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        validate_trace(&parsed).unwrap();
+        // the vt slices land on pid 1 with µs timestamps
+        let events = parsed.field("traceEvents").unwrap().as_arr().unwrap();
+        let stall = events
+            .iter()
+            .find(|e| {
+                e.field_opt("name").and_then(|n| n.as_str().ok()) == Some("stall")
+                    && e.field_opt("ph").and_then(|p| p.as_str().ok()) == Some("X")
+            })
+            .expect("stall slice present");
+        assert_eq!(stall.field("pid").unwrap().as_usize().unwrap(), 1);
+        assert!((stall.field("ts").unwrap().as_f64().unwrap() - 0.25e6).abs() < 1e-6);
+        let _ = std::fs::remove_dir_all(&dir);
+        set_level_override(None);
+    }
+
+    #[test]
+    fn validator_rejects_malformed() {
+        assert!(validate_trace(&Json::parse(r#"{"traceEvents":[]}"#).unwrap()).is_err());
+        assert!(validate_trace(&Json::parse("{}").unwrap()).is_err());
+        let neg = r#"{"traceEvents":[{"name":"x","cat":"kernel","ph":"X",
+            "pid":0,"tid":0,"ts":-1,"dur":1}]}"#;
+        assert!(validate_trace(&Json::parse(neg).unwrap()).is_err());
+        let badcat = r#"{"traceEvents":[{"name":"x","cat":"nonsense","ph":"X",
+            "pid":0,"tid":0,"ts":0,"dur":1}]}"#;
+        assert!(validate_trace(&Json::parse(badcat).unwrap()).is_err());
+        let badph = r#"{"traceEvents":[{"name":"x","ph":"B","pid":0}]}"#;
+        assert!(validate_trace(&Json::parse(badph).unwrap()).is_err());
+    }
+
+    #[test]
+    fn summary_schema() {
+        let s = summary_json();
+        assert_eq!(s.field("schema").unwrap().as_str().unwrap(), "psgld-obs-summary/1");
+        let phases = s.field("phases").unwrap();
+        for p in Phase::ALL {
+            let e = phases.field(p.name()).unwrap();
+            assert!(e.field("total_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.field("p99_ns").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        let counters = s.field("counters").unwrap();
+        for c in Counter::ALL {
+            counters.field(c.name()).unwrap();
+        }
+    }
+}

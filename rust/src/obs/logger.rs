@@ -1,0 +1,169 @@
+//! Minimal leveled logger controlled by `PALLAS_LOG`.
+//!
+//! Library code logs through the `log_error!` / `log_warn!` /
+//! `log_info!` / `log_debug!` macros instead of printing
+//! unconditionally. The default level is `info`, which reproduces the
+//! pre-logger behaviour exactly: info lines go to stdout (tables, CSV
+//! paths), warnings and errors to stderr, debug is silent. Set
+//! `PALLAS_LOG=off` to silence library output entirely (suppressed
+//! lines are counted in the metrics registry), or `PALLAS_LOG=debug`
+//! for extra detail.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::metrics::{counter_add, Counter};
+
+/// Log verbosity, ordered: a message is emitted when its level is at
+/// or below the active one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Off,
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl LogLevel {
+    pub fn parse(s: &str) -> Option<LogLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "silent" => Some(LogLevel::Off),
+            "error" => Some(LogLevel::Error),
+            "warn" | "warning" => Some(LogLevel::Warn),
+            "info" | "" => Some(LogLevel::Info),
+            "debug" | "trace" => Some(LogLevel::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LogLevel::Off => "off",
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<LogLevel> {
+        match v {
+            0 => Some(LogLevel::Off),
+            1 => Some(LogLevel::Error),
+            2 => Some(LogLevel::Warn),
+            3 => Some(LogLevel::Info),
+            4 => Some(LogLevel::Debug),
+            _ => None,
+        }
+    }
+}
+
+const LEVEL_UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+static LEVEL_OVERRIDE: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+fn detect() -> LogLevel {
+    std::env::var("PALLAS_LOG")
+        .ok()
+        .and_then(|v| LogLevel::parse(&v))
+        .unwrap_or(LogLevel::Info)
+}
+
+/// The active log level (`PALLAS_LOG`, default `info`).
+pub fn log_level() -> LogLevel {
+    if let Some(l) = LogLevel::from_u8(LEVEL_OVERRIDE.load(Ordering::Relaxed)) {
+        return l;
+    }
+    match LogLevel::from_u8(LEVEL.load(Ordering::Relaxed)) {
+        Some(l) => l,
+        None => {
+            let l = detect();
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+/// Force a log level (tests); `None` restores `PALLAS_LOG` detection.
+pub fn set_log_override(l: Option<LogLevel>) {
+    LEVEL_OVERRIDE.store(l.map(|l| l as u8).unwrap_or(LEVEL_UNSET), Ordering::Relaxed);
+}
+
+/// Would a message at `lvl` be emitted?
+#[inline]
+pub fn log_enabled(lvl: LogLevel) -> bool {
+    lvl as u8 <= log_level() as u8 && lvl != LogLevel::Off
+}
+
+/// Emit one log line (macro backend — use the `log_*!` macros).
+/// Warnings and errors go to stderr, info/debug to stdout, matching
+/// the pre-logger call sites.
+pub fn log(lvl: LogLevel, args: std::fmt::Arguments<'_>) {
+    if !log_enabled(lvl) {
+        counter_add(Counter::LogLinesSuppressed, 1);
+        return;
+    }
+    match lvl {
+        LogLevel::Error | LogLevel::Warn => eprintln!("{args}"),
+        _ => println!("{args}"),
+    }
+}
+
+/// Log at error level (stderr). Accepts `format!` syntax.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::logger::LogLevel::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at warn level (stderr). Accepts `format!` syntax.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::logger::LogLevel::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at info level (stdout, on by default). Accepts `format!` syntax.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::logger::LogLevel::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at debug level (stdout, off by default). Accepts `format!` syntax.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::logger::LogLevel::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_order() {
+        assert_eq!(LogLevel::parse("off"), Some(LogLevel::Off));
+        assert_eq!(LogLevel::parse("WARN"), Some(LogLevel::Warn));
+        assert_eq!(LogLevel::parse("debug"), Some(LogLevel::Debug));
+        assert_eq!(LogLevel::parse("nope"), None);
+        assert!(LogLevel::Error < LogLevel::Info);
+    }
+
+    #[test]
+    fn enabled_respects_override() {
+        let _g = super::super::test_guard();
+        set_log_override(Some(LogLevel::Warn));
+        assert!(log_enabled(LogLevel::Error));
+        assert!(log_enabled(LogLevel::Warn));
+        assert!(!log_enabled(LogLevel::Info));
+        assert!(!log_enabled(LogLevel::Debug));
+        set_log_override(Some(LogLevel::Off));
+        assert!(!log_enabled(LogLevel::Error));
+        set_log_override(None);
+    }
+}

@@ -1,0 +1,315 @@
+//! Per-thread sharded metrics: counters and log2 duration histograms.
+//!
+//! Each thread owns one [`Shard`] — fixed-size arrays of relaxed
+//! `AtomicU64`s, created on that thread's first recording and
+//! registered once in a global list. The hot path after that first
+//! touch is a thread-local lookup plus relaxed `fetch_add`s: no lock,
+//! no allocation, no contention (only [`snapshot`]/[`reset`] walk the
+//! registry, and they run off the hot path).
+
+use std::cell::OnceCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::{level, ObsLevel, Phase, PHASE_COUNT};
+
+/// Log2 histogram width. Bucket `0` holds `[0, 1]` ns; bucket `i > 0`
+/// holds `(2^(i-1), 2^i]` ns; the last bucket absorbs everything
+/// larger (2^38 ns ≈ 4.6 min — far beyond any span we record).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Number of event counters (the fixed set below).
+pub const COUNTER_COUNT: usize = 11;
+
+/// Monotone event counters. Fixed at compile time so shard storage is
+/// a plain array and incrementing can never allocate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Sampler iterations started.
+    Steps,
+    /// Disjoint blocks executed (all execution paths).
+    Blocks,
+    /// Worker-pool epochs dispatched.
+    PoolEpochs,
+    /// Bounded-staleness stalls entered (async executor).
+    Stalls,
+    /// Message retries after a simulated drop.
+    Retries,
+    /// Coordinated rollbacks after a crash.
+    Rollbacks,
+    /// Consistent checkpoints taken.
+    Checkpoints,
+    /// Ring messages sent.
+    MsgsSent,
+    /// Ring messages dropped by fault injection.
+    MsgsDropped,
+    /// Trace events discarded because a thread buffer hit its cap.
+    TraceEventsDropped,
+    /// Log lines suppressed below the active `PALLAS_LOG` level.
+    LogLinesSuppressed,
+}
+
+impl Counter {
+    pub const ALL: [Counter; COUNTER_COUNT] = [
+        Counter::Steps,
+        Counter::Blocks,
+        Counter::PoolEpochs,
+        Counter::Stalls,
+        Counter::Retries,
+        Counter::Rollbacks,
+        Counter::Checkpoints,
+        Counter::MsgsSent,
+        Counter::MsgsDropped,
+        Counter::TraceEventsDropped,
+        Counter::LogLinesSuppressed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Steps => "steps",
+            Counter::Blocks => "blocks",
+            Counter::PoolEpochs => "pool_epochs",
+            Counter::Stalls => "stalls",
+            Counter::Retries => "retries",
+            Counter::Rollbacks => "rollbacks",
+            Counter::Checkpoints => "checkpoints",
+            Counter::MsgsSent => "msgs_sent",
+            Counter::MsgsDropped => "msgs_dropped",
+            Counter::TraceEventsDropped => "trace_events_dropped",
+            Counter::LogLinesSuppressed => "log_lines_suppressed",
+        }
+    }
+}
+
+/// One thread's slice of the registry. All loads/stores are relaxed:
+/// the merge in [`snapshot`] tolerates tearing between fields (it is a
+/// monitoring read, not a synchronisation point).
+struct Shard {
+    counters: [AtomicU64; COUNTER_COUNT],
+    phase_count: [AtomicU64; PHASE_COUNT],
+    phase_ns: [AtomicU64; PHASE_COUNT],
+    hist: [[AtomicU64; HIST_BUCKETS]; PHASE_COUNT],
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            phase_count: std::array::from_fn(|_| AtomicU64::new(0)),
+            phase_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            hist: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+        }
+    }
+
+    fn zero(&self) {
+        for c in &self.counters {
+            c.store(0, Ordering::Relaxed);
+        }
+        for c in &self.phase_count {
+            c.store(0, Ordering::Relaxed);
+        }
+        for c in &self.phase_ns {
+            c.store(0, Ordering::Relaxed);
+        }
+        for row in &self.hist {
+            for c in row {
+                c.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Shard>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<Shard>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: OnceCell<Arc<Shard>> = OnceCell::new();
+}
+
+/// Run `f` against this thread's shard, creating + registering it on
+/// first use (the only allocation this module ever performs on a
+/// recording thread, and it happens once per thread — warmup in the
+/// counting-allocator test absorbs it).
+fn with_shard<R>(f: impl FnOnce(&Shard) -> R) -> R {
+    LOCAL.with(|cell| {
+        let shard = cell.get_or_init(|| {
+            let s = Arc::new(Shard::new());
+            registry().lock().unwrap_or_else(|e| e.into_inner()).push(Arc::clone(&s));
+            s
+        });
+        f(shard)
+    })
+}
+
+/// Bump a counter by `n`. A relaxed load + early return when obs is
+/// off.
+#[inline]
+pub fn counter_add(c: Counter, n: u64) {
+    if level() == ObsLevel::Off {
+        return;
+    }
+    with_shard(|s| {
+        s.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    });
+}
+
+/// Histogram bucket for a duration in nanoseconds (see [`HIST_BUCKETS`]).
+#[inline]
+fn bucket(ns: u64) -> usize {
+    if ns <= 1 {
+        0
+    } else {
+        (64 - (ns - 1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Record one completed span duration. Called from the span guard's
+/// drop; callers have already checked the level is at least
+/// `Counters`.
+pub(super) fn record_duration(phase: Phase, ns: u64) {
+    with_shard(|s| {
+        let p = phase.idx();
+        s.phase_count[p].fetch_add(1, Ordering::Relaxed);
+        s.phase_ns[p].fetch_add(ns, Ordering::Relaxed);
+        s.hist[p][bucket(ns)].fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// A merged, immutable view of every shard at one point in time.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Indexed by `Counter as usize`.
+    pub counters: Vec<u64>,
+    /// Spans completed per phase, indexed by `Phase::idx()`.
+    pub phase_count: Vec<u64>,
+    /// Total nanoseconds per phase, indexed by `Phase::idx()`.
+    pub phase_ns: Vec<u64>,
+    /// Log2 duration histogram per phase: `hist[phase][bucket]`.
+    pub hist: Vec<Vec<u64>>,
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn phase_seconds(&self, p: Phase) -> f64 {
+        self.phase_ns[p.idx()] as f64 * 1e-9
+    }
+
+    /// Quantile estimate (in ns) from the log2 histogram: the upper
+    /// edge of the bucket containing the `q`-th sample, i.e. an upper
+    /// bound tight to within 2x. Returns 0.0 for an empty histogram.
+    pub fn quantile_ns(&self, p: Phase, q: f64) -> f64 {
+        let h = &self.hist[p.idx()];
+        let total: u64 = h.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in h.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return (1u64 << i) as f64;
+            }
+        }
+        (1u64 << (HIST_BUCKETS - 1)) as f64
+    }
+}
+
+/// Merge every registered shard into one snapshot.
+pub fn snapshot() -> MetricsSnapshot {
+    let mut out = MetricsSnapshot {
+        counters: vec![0; COUNTER_COUNT],
+        phase_count: vec![0; PHASE_COUNT],
+        phase_ns: vec![0; PHASE_COUNT],
+        hist: vec![vec![0; HIST_BUCKETS]; PHASE_COUNT],
+    };
+    let shards = registry().lock().unwrap_or_else(|e| e.into_inner());
+    for s in shards.iter() {
+        for (o, c) in out.counters.iter_mut().zip(&s.counters) {
+            *o += c.load(Ordering::Relaxed);
+        }
+        for (o, c) in out.phase_count.iter_mut().zip(&s.phase_count) {
+            *o += c.load(Ordering::Relaxed);
+        }
+        for (o, c) in out.phase_ns.iter_mut().zip(&s.phase_ns) {
+            *o += c.load(Ordering::Relaxed);
+        }
+        for (orow, srow) in out.hist.iter_mut().zip(&s.hist) {
+            for (o, c) in orow.iter_mut().zip(srow) {
+                *o += c.load(Ordering::Relaxed);
+            }
+        }
+    }
+    out
+}
+
+/// Zero every registered shard (tests and multi-run benches). Threads
+/// keep their shards; only the counts reset.
+pub fn reset() {
+    let shards = registry().lock().unwrap_or_else(|e| e.into_inner());
+    for s in shards.iter() {
+        s.zero();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(2), 1);
+        assert_eq!(bucket(3), 2);
+        assert_eq!(bucket(4), 2);
+        assert_eq!(bucket(5), 3);
+        assert_eq!(bucket(1024), 10);
+        assert_eq!(bucket(1025), 11);
+        assert_eq!(bucket(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn record_and_snapshot_roundtrip() {
+        let _g = super::super::test_guard();
+        super::super::set_level_override(Some(ObsLevel::Counters));
+        let before = snapshot();
+        counter_add(Counter::Blocks, 3);
+        record_duration(Phase::Kernel, 1000);
+        record_duration(Phase::Kernel, 2000);
+        // deltas are >= (never ==): concurrent tests outside this
+        // module may record while the override is non-Off
+        let s = snapshot();
+        assert!(s.counter(Counter::Blocks) >= before.counter(Counter::Blocks) + 3);
+        let k = Phase::Kernel.idx();
+        assert!(s.phase_count[k] >= before.phase_count[k] + 2);
+        assert!(s.phase_ns[k] >= before.phase_ns[k] + 3000);
+        assert!(s.phase_seconds(Phase::Kernel) >= 3e-6 - 1e-12);
+        // the max bucket edge must cover the 2000ns sample
+        assert!(s.quantile_ns(Phase::Kernel, 1.0) >= 2000.0);
+        // once the level is Off nothing can record, so reset() leaves
+        // an exactly-zero registry
+        super::super::set_level_override(Some(ObsLevel::Off));
+        reset();
+        let z = snapshot();
+        assert_eq!(z.counter(Counter::Blocks), 0);
+        assert_eq!(z.phase_count[k], 0);
+        assert_eq!(z.quantile_ns(Phase::Kernel, 0.5), 0.0);
+        super::super::set_level_override(None);
+    }
+
+    #[test]
+    fn counter_add_is_inert_when_off() {
+        let _g = super::super::test_guard();
+        super::super::set_level_override(Some(ObsLevel::Off));
+        let before = snapshot().counter(Counter::Retries);
+        counter_add(Counter::Retries, 5);
+        assert_eq!(snapshot().counter(Counter::Retries), before);
+        super::super::set_level_override(None);
+    }
+}

@@ -1,0 +1,241 @@
+//! Zero-overhead observability: sharded metrics, hot-path spans,
+//! leveled logging and Perfetto-compatible trace export.
+//!
+//! The paper's claim is that PSGLD's per-iteration cost stays near
+//! SGD's while scaling across cores and nodes — this layer makes the
+//! *where does an iteration's time go* question answerable (kernel vs.
+//! noise vs. scheduling vs. ring comms vs. staleness stalls) without
+//! perturbing the thing being measured. Three levels, selected by the
+//! `PALLAS_OBS` environment variable:
+//!
+//! * `off` (default) — every instrumentation point is a single relaxed
+//!   atomic load and a branch. No clock reads, no allocation: the
+//!   counting-allocator test and the bitwise-determinism tests run with
+//!   the instrumented binary and must keep passing.
+//! * `counters` — spans record durations into per-thread **shards**
+//!   (fixed-size counter/histogram arrays behind relaxed atomics, one
+//!   shard per thread, merged only at collection time), so the hot path
+//!   never takes a lock and never allocates once a thread's shard
+//!   exists.
+//! * `full` — additionally buffers one trace event per span into a
+//!   per-thread buffer for Chrome/Perfetto timeline export
+//!   ([`write_chrome_trace`]); the async cluster simulator also emits
+//!   virtual-time slices (compute / stall / comms / rollback) on one
+//!   track per node.
+//!
+//! Observability never touches an RNG stream and never feeds back into
+//! control flow, so the chain is bitwise identical at every level.
+//!
+//! The leveled logger ([`logger`], `PALLAS_LOG`, default `info` =
+//! pre-existing behaviour) replaces the ad-hoc `println!` call sites in
+//! library code.
+
+pub mod export;
+pub mod logger;
+pub mod metrics;
+pub mod span;
+
+pub use export::{validate_trace, write_chrome_trace, write_summary, VtEvent};
+pub use logger::{log_enabled, set_log_override, LogLevel};
+pub use metrics::{counter_add, reset, snapshot, Counter, MetricsSnapshot};
+pub use span::{clear_events, drain_events, Span, TraceEvent};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instrumentation level (see the module docs). Levels are ordered:
+/// `Off < Counters < Full`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsLevel {
+    /// No clocks, no recording; a single relaxed load per site.
+    Off,
+    /// Durations into sharded counters/histograms; no trace events.
+    Counters,
+    /// Counters plus buffered trace events for timeline export.
+    Full,
+}
+
+impl ObsLevel {
+    /// Parse a `PALLAS_OBS` value. Unknown strings parse to `None`
+    /// (callers fall back to `Off`).
+    pub fn parse(s: &str) -> Option<ObsLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" | "" => Some(ObsLevel::Off),
+            "counters" | "1" => Some(ObsLevel::Counters),
+            "full" | "trace" | "2" => Some(ObsLevel::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Counters => "counters",
+            ObsLevel::Full => "full",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<ObsLevel> {
+        match v {
+            0 => Some(ObsLevel::Off),
+            1 => Some(ObsLevel::Counters),
+            2 => Some(ObsLevel::Full),
+            _ => None,
+        }
+    }
+}
+
+const LEVEL_UNSET: u8 = u8::MAX;
+/// Cached `PALLAS_OBS` detection (env read once).
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+/// Test/CLI hook; takes precedence over the environment.
+static LEVEL_OVERRIDE: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+fn detect() -> ObsLevel {
+    std::env::var("PALLAS_OBS")
+        .ok()
+        .and_then(|v| ObsLevel::parse(&v))
+        .unwrap_or(ObsLevel::Off)
+}
+
+/// The active instrumentation level. This is the one load every
+/// instrumentation point performs; with `Off` nothing else runs.
+#[inline]
+pub fn level() -> ObsLevel {
+    if let Some(l) = ObsLevel::from_u8(LEVEL_OVERRIDE.load(Ordering::Relaxed)) {
+        return l;
+    }
+    match ObsLevel::from_u8(LEVEL.load(Ordering::Relaxed)) {
+        Some(l) => l,
+        None => {
+            let l = detect();
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+/// Force a level (tests, benches and the CLI `--trace-out` path);
+/// `None` restores `PALLAS_OBS` detection. Flipping the level never
+/// changes numerical results — only what gets recorded.
+pub fn set_level_override(l: Option<ObsLevel>) {
+    LEVEL_OVERRIDE.store(l.map(|l| l as u8).unwrap_or(LEVEL_UNSET), Ordering::Relaxed);
+}
+
+/// Number of span phases (the fixed taxonomy below).
+pub const PHASE_COUNT: usize = 11;
+
+/// The span taxonomy. Fixed at compile time so the per-thread shards
+/// are plain arrays — registering a phase can never allocate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// One whole sampler iteration (`Psgld::step`).
+    Step,
+    /// Part scheduling + step-size/nonneg-hint preparation.
+    Schedule,
+    /// Gradient accumulation (sparse CSR walk or tiled dense kernel).
+    Kernel,
+    /// Langevin/SGD parameter application incl. noise generation.
+    Noise,
+    /// Ring messages on the wire (virtual time in the async executor).
+    Comms,
+    /// Blocked on the bounded-staleness rule.
+    Stall,
+    /// Consistent checkpoint writes.
+    Checkpoint,
+    /// Crash recovery (coordinated rollback + restart delay).
+    Rollback,
+    /// Monitor/diagnostic evaluation (excluded from sampling time).
+    Monitor,
+    /// One worker slot's share of a pool epoch.
+    PoolTask,
+    /// Artifact/manifest I/O.
+    Io,
+}
+
+impl Phase {
+    pub const ALL: [Phase; PHASE_COUNT] = [
+        Phase::Step,
+        Phase::Schedule,
+        Phase::Kernel,
+        Phase::Noise,
+        Phase::Comms,
+        Phase::Stall,
+        Phase::Checkpoint,
+        Phase::Rollback,
+        Phase::Monitor,
+        Phase::PoolTask,
+        Phase::Io,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Step => "step",
+            Phase::Schedule => "schedule",
+            Phase::Kernel => "kernel",
+            Phase::Noise => "noise",
+            Phase::Comms => "comms",
+            Phase::Stall => "stall",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Rollback => "rollback",
+            Phase::Monitor => "monitor",
+            Phase::PoolTask => "pool_task",
+            Phase::Io => "io",
+        }
+    }
+
+    /// Shard array index.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Serialize unit tests that flip the global level override (the lib
+/// test binary runs tests on multiple threads).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: std::sync::OnceLock<std::sync::Mutex<()>> = std::sync::OnceLock::new();
+    GUARD
+        .get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_contract() {
+        assert_eq!(ObsLevel::parse("off"), Some(ObsLevel::Off));
+        assert_eq!(ObsLevel::parse("OFF"), Some(ObsLevel::Off));
+        assert_eq!(ObsLevel::parse("counters"), Some(ObsLevel::Counters));
+        assert_eq!(ObsLevel::parse("full"), Some(ObsLevel::Full));
+        assert_eq!(ObsLevel::parse(" full "), Some(ObsLevel::Full));
+        assert_eq!(ObsLevel::parse("banana"), None);
+        assert!(ObsLevel::Off < ObsLevel::Counters);
+        assert!(ObsLevel::Counters < ObsLevel::Full);
+    }
+
+    #[test]
+    fn override_wins_and_restores() {
+        let _g = test_guard();
+        set_level_override(Some(ObsLevel::Counters));
+        assert_eq!(level(), ObsLevel::Counters);
+        set_level_override(Some(ObsLevel::Full));
+        assert_eq!(level(), ObsLevel::Full);
+        set_level_override(None);
+        // back to env detection (no PALLAS_OBS in the test env → Off,
+        // but any cached value is acceptable — just must not panic)
+        let _ = level();
+    }
+
+    #[test]
+    fn phase_taxonomy_is_dense() {
+        assert_eq!(Phase::ALL.len(), PHASE_COUNT);
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.idx(), i);
+            assert!(!p.name().is_empty());
+        }
+    }
+}

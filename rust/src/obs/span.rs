@@ -1,0 +1,207 @@
+//! RAII phase spans and per-thread trace-event buffers.
+//!
+//! [`Span::enter`] is the single instrumentation primitive on the wall
+//! clock: with obs off it is a relaxed load and a branch (no clock
+//! read); at `counters` it records its duration into the sharded
+//! metrics on drop; at `full` it additionally appends one
+//! [`TraceEvent`] to its thread's buffer for timeline export. Buffers
+//! are drained by [`drain_events`] (export time only). Virtual-time
+//! slices from the async cluster simulator use
+//! [`super::export::VtEvent`] instead — virtual time has no wall
+//! clock.
+
+use std::cell::OnceCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::metrics::{self, Counter};
+use super::{level, ObsLevel, Phase};
+
+/// Per-thread cap on buffered trace events (~44 MB at 44 B/event).
+/// Overflow drops the event and bumps [`Counter::TraceEventsDropped`]
+/// rather than growing without bound.
+const EVENT_CAP: usize = 1 << 20;
+
+/// One completed wall-clock span, timestamped in nanoseconds since the
+/// process's first instrumented event.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Static site label (e.g. `"grads_sparse"`).
+    pub name: &'static str,
+    /// Taxonomy phase (becomes the Chrome trace `cat`).
+    pub phase: Phase,
+    /// Stable per-thread track id (dense, assigned on first event).
+    pub tid: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the trace epoch (first instrumented event).
+pub(super) fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+struct ThreadBuf {
+    tid: u32,
+    events: Arc<Mutex<Vec<TraceEvent>>>,
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+fn buf_registry() -> &'static Mutex<Vec<Arc<Mutex<Vec<TraceEvent>>>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<Mutex<Vec<TraceEvent>>>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn thread_names() -> &'static Mutex<BTreeMap<u32, String>> {
+    static NAMES: OnceLock<Mutex<BTreeMap<u32, String>>> = OnceLock::new();
+    NAMES.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+thread_local! {
+    static TBUF: OnceCell<ThreadBuf> = OnceCell::new();
+}
+
+fn with_buf<R>(f: impl FnOnce(&ThreadBuf) -> R) -> R {
+    TBUF.with(|cell| {
+        let buf = cell.get_or_init(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let name = std::thread::current()
+                .name()
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            thread_names().lock().unwrap_or_else(|e| e.into_inner()).insert(tid, name);
+            let events = Arc::new(Mutex::new(Vec::new()));
+            buf_registry().lock().unwrap_or_else(|e| e.into_inner()).push(Arc::clone(&events));
+            ThreadBuf { tid, events }
+        });
+        f(buf)
+    })
+}
+
+/// RAII span guard. Construct with [`Span::enter`]; the interval ends
+/// when the guard drops. Bind it to a named `_span` variable — `let _ =`
+/// would drop immediately.
+pub struct Span {
+    phase: Phase,
+    name: &'static str,
+    start_ns: u64,
+    armed: bool,
+}
+
+impl Span {
+    /// Open a span for `phase` at the current wall time. With obs off
+    /// this reads no clock and records nothing.
+    #[inline]
+    pub fn enter(phase: Phase, name: &'static str) -> Span {
+        if level() == ObsLevel::Off {
+            return Span { phase, name, start_ns: 0, armed: false };
+        }
+        Span { phase, name, start_ns: now_ns(), armed: true }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let dur = now_ns().saturating_sub(self.start_ns);
+        metrics::record_duration(self.phase, dur);
+        if level() == ObsLevel::Full {
+            let dropped = with_buf(|buf| {
+                let mut ev = buf.events.lock().unwrap_or_else(|e| e.into_inner());
+                if ev.len() < EVENT_CAP {
+                    ev.push(TraceEvent {
+                        name: self.name,
+                        phase: self.phase,
+                        tid: buf.tid,
+                        start_ns: self.start_ns,
+                        dur_ns: dur,
+                    });
+                    false
+                } else {
+                    true
+                }
+            });
+            if dropped {
+                metrics::counter_add(Counter::TraceEventsDropped, 1);
+            }
+        }
+    }
+}
+
+/// Drain every thread's buffered events (sorted by start time) along
+/// with the `tid → thread name` table for track naming. Export-time
+/// only.
+pub fn drain_events() -> (Vec<TraceEvent>, Vec<(u32, String)>) {
+    let mut out = Vec::new();
+    {
+        let bufs = buf_registry().lock().unwrap_or_else(|e| e.into_inner());
+        for b in bufs.iter() {
+            let mut ev = b.lock().unwrap_or_else(|e| e.into_inner());
+            out.append(&mut ev);
+        }
+    }
+    out.sort_by_key(|e| (e.start_ns, e.tid));
+    let names = thread_names()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|(k, v)| (*k, v.clone()))
+        .collect();
+    (out, names)
+}
+
+/// Discard all buffered events (tests and multi-run benches).
+pub fn clear_events() {
+    let bufs = buf_registry().lock().unwrap_or_else(|e| e.into_inner());
+    for b in bufs.iter() {
+        b.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_event_at_full() {
+        let _g = super::super::test_guard();
+        super::super::set_level_override(Some(ObsLevel::Full));
+        clear_events();
+        {
+            let _span = Span::enter(Phase::Io, "span_test_site");
+            std::hint::black_box(0u64);
+        }
+        let (events, names) = drain_events();
+        let mine: Vec<_> = events.iter().filter(|e| e.name == "span_test_site").collect();
+        assert_eq!(mine.len(), 1);
+        assert_eq!(mine[0].phase, Phase::Io);
+        assert!(names.iter().any(|(tid, _)| *tid == mine[0].tid));
+        // drained means gone
+        let (again, _) = drain_events();
+        assert!(!again.iter().any(|e| e.name == "span_test_site"));
+        super::super::set_level_override(None);
+    }
+
+    #[test]
+    fn span_is_inert_when_off() {
+        let _g = super::super::test_guard();
+        super::super::set_level_override(Some(ObsLevel::Off));
+        clear_events();
+        {
+            let _span = Span::enter(Phase::Io, "span_off_site");
+        }
+        let (events, _) = drain_events();
+        assert!(!events.iter().any(|e| e.name == "span_off_site"));
+        super::super::set_level_override(None);
+    }
+}

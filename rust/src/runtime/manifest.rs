@@ -141,6 +141,7 @@ pub struct Manifest {
 impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
+        let _io_span = crate::obs::Span::enter(crate::obs::Phase::Io, "manifest_load");
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).map_err(|e| {
             Error::Runtime(format!(
@@ -159,6 +160,11 @@ impl Manifest {
             .iter()
             .map(|e| ArtifactEntry::from_json(dir, e))
             .collect::<Result<Vec<_>>>()?;
+        crate::log_debug!(
+            "manifest: loaded {} artifact entries from {}",
+            entries.len(),
+            path.display()
+        );
         Ok(Manifest { dir: dir.to_path_buf(), entries })
     }
 

@@ -21,6 +21,7 @@
 use crate::data::sparse::BlockEntries;
 use crate::kernels::{grads_sparse_core, sgld_apply_core};
 use crate::model::NmfModel;
+use crate::obs::{counter_add, Counter, Phase, Span};
 use crate::rng::Rng;
 use crate::util::parallel::ScratchArena;
 
@@ -51,9 +52,14 @@ pub fn sparse_block_langevin(
 ) {
     debug_assert_eq!(gw.len(), w.len());
     debug_assert_eq!(ght.len(), ht.len());
-    gw.fill(0.0);
-    ght.fill(0.0);
-    let _ = grads_sparse_core(w, ht, k, blk, model.beta, model.phi, nonneg, gw, ght);
+    counter_add(Counter::Blocks, 1);
+    {
+        let _kernel_span = Span::enter(Phase::Kernel, "grads_sparse");
+        gw.fill(0.0);
+        ght.fill(0.0);
+        let _ = grads_sparse_core(w, ht, k, blk, model.beta, model.phi, nonneg, gw, ght);
+    }
+    let _noise_span = Span::enter(Phase::Noise, "langevin_apply");
     // Per-block stream keyed by (seed, t, block) — independent of which
     // worker slot or event-loop turn executes the block.
     let mut brng = Rng::derive(seed, &[t, block]);

@@ -33,6 +33,7 @@ use crate::config::RunConfig;
 use crate::linalg::Mat;
 use crate::metrics::Trace;
 use crate::model::NmfModel;
+use crate::obs::{Phase, Span};
 use crate::rng::Rng;
 
 /// Factor state `(W, H)` with H stored transposed (`Ht[j][k] = h[k][j]`).
@@ -157,9 +158,13 @@ pub fn run_sampler<S: Sampler + ?Sized>(
     let mut posterior = PosteriorMean::new(i, j, k);
     let mut trace = Trace::new(sampler.name());
     let mut sampling_seconds = 0.0f64;
+    let mut monitored = |state: &FactorState| {
+        let _monitor_span = Span::enter(Phase::Monitor, "monitor");
+        monitor(state)
+    };
 
     // initial monitor point (iteration 0)
-    trace.push(0, 0.0, monitor(sampler.state()));
+    trace.push(0, 0.0, monitored(sampler.state()));
 
     for t in 1..=run.t_total {
         let tick = Instant::now();
@@ -167,7 +172,7 @@ pub fn run_sampler<S: Sampler + ?Sized>(
         sampling_seconds += tick.elapsed().as_secs_f64();
 
         if t % run.monitor_every == 0 || t == run.t_total {
-            trace.push(t, sampling_seconds, monitor(sampler.state()));
+            trace.push(t, sampling_seconds, monitored(sampler.state()));
         }
         if t > run.burn_in && (t - run.burn_in) % run.thin == 0 {
             posterior.add(sampler.state());

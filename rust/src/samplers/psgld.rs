@@ -24,6 +24,7 @@ use crate::kernels::{
 use crate::linalg::Mat;
 use crate::metrics;
 use crate::model::NmfModel;
+use crate::obs::{counter_add, Counter, Phase, Span};
 use crate::partition::{GridPartition, Part, PartScheduler};
 use crate::rng::Rng;
 use crate::samplers::{run_sampler, sparse_block_langevin, FactorState, RunResult, Sampler};
@@ -229,6 +230,10 @@ impl Psgld {
 
 impl Sampler for Psgld {
     fn step(&mut self, t: u64) {
+        // Dropped last: the Step span spans the whole iteration.
+        let _step_span = Span::enter(Phase::Step, "step");
+        counter_add(Counter::Steps, 1);
+        let schedule_span = Span::enter(Phase::Schedule, "schedule_part");
         let b = self.grid.b();
         let k = self.model.k;
         let mut rng = Rng::derive(self.seed, &[t, 0xcafe]);
@@ -251,6 +256,7 @@ impl Sampler for Psgld {
                 bs.nnz(),
             ),
         };
+        drop(schedule_span);
 
         // Base pointers for the in-place stripe updates. The closure
         // below re-derives each block's W row-stripe and Ht col-stripe
@@ -296,25 +302,30 @@ impl Sampler for Psgld {
                     return;
                 }
             }
-            gw.fill(0.0);
-            ght.fill(0.0);
-            match data {
-                DataBlocks::Dense(blocks) => {
-                    let _ = grads_dense_tiled(
-                        w, m, ht, n, k,
-                        blocks[bi * b + bj].as_slice(),
-                        model.beta, model.phi, model.mirror,
-                        gw, ght, arena,
-                    );
-                }
-                DataBlocks::Sparse(bs) => {
-                    let _ = grads_sparse_core(
-                        w, ht, k, bs.block(bi, bj),
-                        model.beta, model.phi, sparse_nonneg,
-                        gw, ght,
-                    );
+            counter_add(Counter::Blocks, 1);
+            {
+                let _kernel_span = Span::enter(Phase::Kernel, "grads_block");
+                gw.fill(0.0);
+                ght.fill(0.0);
+                match data {
+                    DataBlocks::Dense(blocks) => {
+                        let _ = grads_dense_tiled(
+                            w, m, ht, n, k,
+                            blocks[bi * b + bj].as_slice(),
+                            model.beta, model.phi, model.mirror,
+                            gw, ght, arena,
+                        );
+                    }
+                    DataBlocks::Sparse(bs) => {
+                        let _ = grads_sparse_core(
+                            w, ht, k, bs.block(bi, bj),
+                            model.beta, model.phi, sparse_nonneg,
+                            gw, ght,
+                        );
+                    }
                 }
             }
+            let _noise_span = Span::enter(Phase::Noise, "apply_block");
             // Per-block stream keyed by (seed, t, bi) — independent of
             // which worker slot runs the block.
             let mut brng = Rng::derive(seed, &[t, bi as u64]);

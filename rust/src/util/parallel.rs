@@ -24,6 +24,8 @@ use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
+use crate::obs::{counter_add, Counter, Phase, Span};
+
 /// Hard ceiling on the default worker count ("so tests stay snappy" —
 /// and because B rarely exceeds this on one host). Raise per-run with
 /// the `PALLAS_THREADS` environment variable or `with_threads`.
@@ -238,6 +240,9 @@ impl WorkerPool {
         let width = self.width;
         let shared: &PoolShared = &self.shared;
         let job = move |slot: usize| {
+            // One span per slot share per epoch (not per index) — the
+            // span cost amortises over the slot's whole stride.
+            let _task_span = Span::enter(Phase::PoolTask, "pool_slot");
             // SAFETY: slot is driven by exactly one thread this epoch
             let arena = unsafe { &mut *shared.scratch[slot].0.get() };
             let mut i = slot;
@@ -284,6 +289,7 @@ impl WorkerPool {
     /// through `&mut self` entry points, so submissions are serialised.
     fn run(&self, job: &(dyn Fn(usize) + Sync)) {
         debug_assert!(self.width > 1);
+        counter_add(Counter::PoolEpochs, 1);
         {
             let mut st = lock(&self.shared.state);
             debug_assert_eq!(st.remaining, 0, "previous epoch drained");

@@ -78,6 +78,11 @@ fn run_cfg() -> RunConfig {
 // other concurrently-running tests.
 #[test]
 fn psgld_step_is_allocation_free_in_steady_state() {
+    // Pin the obs level rather than trusting the environment: the
+    // instrumented hot path must stay zero-alloc with obs off, and the
+    // env var must not silently weaken this test.
+    psgld::obs::set_level_override(Some(psgld::obs::ObsLevel::Off));
+
     // dense path, 1 and 2 workers
     for threads in [1usize, 2] {
         let model = NmfModel::poisson(8);
@@ -97,4 +102,16 @@ fn psgld_step_is_allocation_free_in_steady_state() {
             .with_threads(threads);
         assert_steady_state_alloc_free(s, &format!("sparse/threads={threads}"));
     }
+
+    // at `counters` the spans and counters record into pre-registered
+    // per-thread atomic shards: still zero steady-state allocations
+    // (the once-per-thread shard registration happens during warmup)
+    psgld::obs::set_level_override(Some(psgld::obs::ObsLevel::Counters));
+    for threads in [1usize, 2] {
+        let s = Psgld::new_sparse(&csr, &model, B, run_cfg(), 6)
+            .unwrap()
+            .with_threads(threads);
+        assert_steady_state_alloc_free(s, &format!("sparse+counters/threads={threads}"));
+    }
+    psgld::obs::set_level_override(None);
 }

@@ -1,0 +1,266 @@
+//! Integration contract for the observability layer (ISSUE 9):
+//!
+//! * at `PALLAS_OBS=full`, the per-phase totals must cover the step
+//!   span's wall time to within 5% — the taxonomy is exhaustive on the
+//!   hot path, not decorative;
+//! * the async simulator's virtual-time slices must reconcile exactly
+//!   with its report counters (compute ↔ busy, stall ↔ stall);
+//! * exported traces must pass the schema validator that the CLI's
+//!   `validate-trace` subcommand runs;
+//! * instrumentation must never perturb the chain (bitwise identical
+//!   at off vs full) and its overhead must stay bounded.
+//!
+//! All tests share one process-global obs level, so they serialise on
+//! a local mutex and `reset()` the metrics registry on entry.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use psgld::cluster::{
+    psgld_distributed_async, ComputeModel, FaultPlan, NetworkModel, StragglerRule, TieBreak,
+};
+use psgld::config::{AsyncClusterConfig, RunConfig, StepSchedule};
+use psgld::data::movielens;
+use psgld::model::NmfModel;
+use psgld::obs::{self, Counter, ObsLevel, Phase, Span};
+use psgld::samplers::{ExecMode, Psgld, Sampler};
+use psgld::util::Json;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fig5_like_sampler(seed: u64) -> Psgld {
+    let csr = movielens::movielens_like_dims(180, 220, 18_000, 32, 7);
+    let model = NmfModel::poisson(32).with_priors(2.0, 2.0);
+    let run = RunConfig::quick(1_000).with_step(StepSchedule::Polynomial { a: 1e-3, b: 0.51 });
+    Psgld::new_sparse(&csr, &model, 6, run, seed)
+        .unwrap()
+        .with_exec_mode(ExecMode::Inline)
+}
+
+/// Acceptance: with obs on, schedule + kernel + noise account for the
+/// step span's wall time to within 5% (single-threaded so the phases
+/// nest inside the step interval with no concurrency double-count).
+#[test]
+fn phase_totals_cover_step_wall_time() {
+    let _g = serial();
+    obs::set_level_override(Some(ObsLevel::Full));
+    obs::reset();
+    obs::clear_events();
+
+    let steps = 40u64;
+    let mut p = fig5_like_sampler(11);
+    for t in 1..=steps {
+        p.step(t);
+    }
+
+    let s = obs::snapshot();
+    assert_eq!(s.counter(Counter::Steps), steps);
+    assert_eq!(s.phase_count[Phase::Step.idx()], steps);
+    let step_s = s.phase_seconds(Phase::Step);
+    let covered = s.phase_seconds(Phase::Schedule)
+        + s.phase_seconds(Phase::Kernel)
+        + s.phase_seconds(Phase::Noise);
+    assert!(step_s > 0.0);
+    let frac = covered / step_s;
+    assert!(
+        frac > 0.95 && frac <= 1.02,
+        "phase taxonomy leaks wall time: schedule+kernel+noise = {covered:.6}s \
+         vs step = {step_s:.6}s (coverage {frac:.3})"
+    );
+
+    // the exported artifacts round-trip through the schema validator
+    let dir = std::env::temp_dir().join("psgld_obs_itest");
+    let trace_path = dir.join("trace.json");
+    let summary_path = dir.join("summary.json");
+    obs::write_chrome_trace(&trace_path, &[]).unwrap();
+    obs::write_summary(&summary_path).unwrap();
+    let trace = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    obs::validate_trace(&trace).unwrap();
+    let summary = Json::parse(&std::fs::read_to_string(&summary_path).unwrap()).unwrap();
+    assert_eq!(
+        summary.field("counters").unwrap().field("steps").unwrap().as_u64().unwrap(),
+        steps
+    );
+    let kernel = summary.field("phases").unwrap().field("kernel").unwrap();
+    assert!(kernel.field("total_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(kernel.field("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    obs::reset();
+    obs::set_level_override(None);
+}
+
+/// The async simulator's virtual-time slices reconcile exactly with
+/// its aggregate report: compute slices sum to `busy_seconds`, stall
+/// slices to `stall_seconds`, and the merged trace validates.
+#[test]
+fn async_vt_events_match_report() {
+    let _g = serial();
+    obs::set_level_override(Some(ObsLevel::Full));
+    obs::reset();
+    obs::clear_events();
+
+    let b = 4usize;
+    let csr = movielens::movielens_like_dims(64, 80, 1600, 4, 21);
+    let model = NmfModel::poisson(4).with_priors(2.0, 2.0);
+    let run = RunConfig::quick(40).with_step(StepSchedule::Polynomial { a: 0.01, b: 0.51 });
+    // one 8x straggler + tau=0 forces the other nodes to stall on its
+    // ring hand-offs, so every slice kind we assert on actually occurs
+    let plan = FaultPlan {
+        stragglers: vec![StragglerRule { node: 0, from_t: 1, to_t: 30, factor: 8.0 }],
+        ..FaultPlan::empty()
+    };
+    let cfg = AsyncClusterConfig::default().with_checkpoint_every(10);
+    let rep = psgld_distributed_async(
+        &csr,
+        &model,
+        b,
+        &run,
+        4242,
+        &NetworkModel::paper_cluster(),
+        &ComputeModel::paper_node(),
+        &cfg,
+        &plan,
+        TieBreak::Fifo,
+        |_| 0.0,
+    )
+    .unwrap();
+
+    assert!(rep.stall_seconds > 0.0, "straggler plan produced no stalls");
+    assert!(!rep.vt_events.is_empty());
+    let sum_for = |cat: &str| -> f64 {
+        rep.vt_events.iter().filter(|e| e.cat == cat).map(|e| e.dur_s).sum()
+    };
+    let compute: f64 = sum_for("kernel");
+    let stall: f64 = sum_for("stall");
+    let tol = |x: f64| 1e-9 * x.max(1.0);
+    assert!(
+        (compute - rep.busy_seconds).abs() < tol(rep.busy_seconds),
+        "compute slices {compute} != busy_seconds {}",
+        rep.busy_seconds
+    );
+    assert!(
+        (stall - rep.stall_seconds).abs() < tol(rep.stall_seconds),
+        "stall slices {stall} != stall_seconds {}",
+        rep.stall_seconds
+    );
+    assert!(
+        rep.vt_events.iter().any(|e| e.cat == "checkpoint"),
+        "checkpoint slices missing"
+    );
+    // counters agree with the report
+    let s = obs::snapshot();
+    assert!(s.counter(Counter::Stalls) > 0);
+    assert_eq!(s.counter(Counter::MsgsSent), rep.messages_sent);
+    assert_eq!(s.counter(Counter::Checkpoints), rep.checkpoints_taken);
+
+    // the merged wall + virtual-time trace passes the CLI validator
+    let dir = std::env::temp_dir().join("psgld_obs_itest_async");
+    let path = dir.join("trace.json");
+    obs::write_chrome_trace(&path, &rep.vt_events).unwrap();
+    let trace = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    obs::validate_trace(&trace).unwrap();
+    // virtual-time slices land on their own process with per-node tracks
+    let events = trace.field("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.iter().any(|e| {
+        e.field_opt("ph").and_then(|p| p.as_str().ok()) == Some("X")
+            && e.field_opt("pid").and_then(|p| p.as_usize().ok()) == Some(1)
+            && e.field_opt("cat").and_then(|c| c.as_str().ok()) == Some("stall")
+    }));
+
+    let _ = std::fs::remove_dir_all(&dir);
+    obs::reset();
+    obs::set_level_override(None);
+}
+
+/// Instrumentation must not perturb the chain: the sampled factors are
+/// bitwise identical with obs off and obs full.
+#[test]
+fn obs_level_never_touches_the_chain() {
+    let _g = serial();
+    let steps = 20u64;
+
+    obs::set_level_override(Some(ObsLevel::Off));
+    let mut off = fig5_like_sampler(33);
+    for t in 1..=steps {
+        off.step(t);
+    }
+
+    obs::set_level_override(Some(ObsLevel::Full));
+    obs::clear_events();
+    let mut full = fig5_like_sampler(33);
+    for t in 1..=steps {
+        full.step(t);
+    }
+    obs::clear_events();
+    obs::reset();
+    obs::set_level_override(None);
+
+    assert_eq!(off.state().w, full.state().w, "obs=full changed the W chain");
+    assert_eq!(off.state().ht, full.state().ht, "obs=full changed the H chain");
+}
+
+/// With obs off a span is a relaxed load and a branch: no clock read,
+/// no allocation. 200 ns/span is ~100x the expected cost — the bound
+/// only exists to catch an accidental always-on clock or lock.
+#[test]
+fn span_overhead_off_is_negligible() {
+    let _g = serial();
+    obs::set_level_override(Some(ObsLevel::Off));
+    for _ in 0..10_000 {
+        let _s = Span::enter(Phase::Kernel, "overhead_probe");
+    }
+    let iters = 2_000_000u64;
+    let tick = Instant::now();
+    for _ in 0..iters {
+        let _s = Span::enter(Phase::Kernel, "overhead_probe");
+        std::hint::black_box(&_s);
+    }
+    let ns_per = tick.elapsed().as_nanos() as f64 / iters as f64;
+    obs::set_level_override(None);
+    assert!(ns_per < 200.0, "obs-off span costs {ns_per:.1} ns/call");
+}
+
+/// Full instrumentation on real sampler steps stays within 3x of the
+/// uninstrumented path (measured: a few percent; the bound is slack
+/// for noisy CI boxes).
+#[test]
+fn full_overhead_is_bounded_on_real_steps() {
+    let _g = serial();
+    let steps = 20u64;
+
+    obs::set_level_override(Some(ObsLevel::Off));
+    let mut p = fig5_like_sampler(55);
+    for t in 1..=5 {
+        p.step(t);
+    }
+    let tick = Instant::now();
+    for t in 6..=5 + steps {
+        p.step(t);
+    }
+    let off_s = tick.elapsed().as_secs_f64();
+
+    obs::set_level_override(Some(ObsLevel::Full));
+    obs::clear_events();
+    let mut p = fig5_like_sampler(55);
+    for t in 1..=5 {
+        p.step(t);
+    }
+    let tick = Instant::now();
+    for t in 6..=5 + steps {
+        p.step(t);
+    }
+    let full_s = tick.elapsed().as_secs_f64();
+    obs::clear_events();
+    obs::reset();
+    obs::set_level_override(None);
+
+    let ratio = full_s / off_s.max(1e-12);
+    assert!(
+        ratio < 3.0,
+        "obs=full is {ratio:.2}x the uninstrumented step ({full_s:.6}s vs {off_s:.6}s)"
+    );
+}
