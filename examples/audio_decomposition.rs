@@ -17,7 +17,7 @@ fn main() -> psgld::Result<()> {
     let data = audio::piano_spectrogram(bins, frames, 2015);
     let w_true = data.w_true.as_ref().expect("synthetic data has templates");
     let model = NmfModel::poisson(k);
-    println!("piano spectrogram: {bins} bins x {frames} frames, {k} notes");
+    psgld::log_info!("piano spectrogram: {bins} bins x {frames} frames, {k} notes");
 
     // --- PSGLD: B = 8 grid, 2000 samples, half burn-in ---------------
     let t = 2_000;
@@ -42,21 +42,27 @@ fn main() -> psgld::Result<()> {
     let w_ld = res_l.posterior.w_mean();
     let score_l = audio::dictionary_recovery_score(&w_ld, w_true);
 
-    println!("\n                 PSGLD        LD");
-    println!(
+    psgld::log_info!("\n                 PSGLD        LD");
+    psgld::log_info!(
         "time ({} it)   {:>8.2}s  {:>8.2}s",
         t, res_p.sampling_seconds, res_l.sampling_seconds
     );
-    println!("final loglik   {:>9.3e}  {:>9.3e}", res_p.trace.last_value(), res_l.trace.last_value());
-    println!("recovery       {score_p:>9.3}  {score_l:>9.3}   (mean cosine vs true templates)");
-    println!(
+    psgld::log_info!(
+        "final loglik   {:>9.3e}  {:>9.3e}",
+        res_p.trace.last_value(),
+        res_l.trace.last_value()
+    );
+    psgld::log_info!(
+        "recovery       {score_p:>9.3}  {score_l:>9.3}   (mean cosine vs true templates)"
+    );
+    psgld::log_info!(
         "speedup        PSGLD is {:.0}x faster than LD at the same sample count",
         res_l.sampling_seconds / res_p.sampling_seconds.max(1e-9)
     );
 
     // show where each learned template peaks (should sit near the true
     // fundamentals and their harmonics)
-    println!("\nlearned template peaks (PSGLD):");
+    psgld::log_info!("\nlearned template peaks (PSGLD):");
     for kk in 0..k {
         let (mut best_bin, mut best) = (0usize, 0f32);
         for i in 0..bins {
@@ -65,7 +71,7 @@ fn main() -> psgld::Result<()> {
                 best_bin = i;
             }
         }
-        println!("  component {kk}: peak at bin {best_bin:>3} (mass {best:.2})");
+        psgld::log_info!("  component {kk}: peak at bin {best_bin:>3} (mass {best:.2})");
     }
     Ok(())
 }

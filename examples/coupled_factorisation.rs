@@ -28,7 +28,7 @@ fn main() -> psgld::Result<()> {
     let mu2 = w_true.matmul_abs(&h2)?;
     let v1 = Mat::from_fn(i, j1, |r, c| rng.poisson(mu1.get(r, c) as f64) as f32);
     let v2 = Mat::from_fn(i, j2, |r, c| rng.poisson(mu2.get(r, c) as f64) as f32);
-    println!(
+    psgld::log_info!(
         "shared dictionary, two observations: V1 {i}x{j1} (scarce), V2 {i}x{j2} (rich)"
     );
 
@@ -52,10 +52,10 @@ fn main() -> psgld::Result<()> {
     }
     let rec_solo = rmse_dense(&solo.state().w, &solo.state().h(), &mu1);
 
-    println!("\nreconstruction error of the noiseless mu1 (lower is better):");
-    println!("  coupled (V1 + V2): {rec_coupled:.3}");
-    println!("  solo (V1 only)   : {rec_solo:.3}");
-    println!(
+    psgld::log_info!("\nreconstruction error of the noiseless mu1 (lower is better):");
+    psgld::log_info!("  coupled (V1 + V2): {rec_coupled:.3}");
+    psgld::log_info!("  solo (V1 only)   : {rec_solo:.3}");
+    psgld::log_info!(
         "  coupling {}",
         if rec_coupled < rec_solo {
             "wins — the shared W borrows strength from V2"
@@ -87,7 +87,7 @@ fn main() -> psgld::Result<()> {
             vals
         })
         .collect();
-    println!(
+    psgld::log_info!(
         "\nGelman-Rubin R-hat over 3 coupled chains: {:.3} (near 1 = converged)",
         gelman_rubin(&chains)
     );

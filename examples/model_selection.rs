@@ -44,12 +44,12 @@ fn main() -> psgld::Result<()> {
     let gen_model = NmfModel::poisson(true_k);
     let data = synth::poisson_nmf(96, 96, &gen_model, 7);
     let (train, test) = holdout_split(&data.v, 0.1, 8);
-    println!(
+    psgld::log_info!(
         "true rank K* = {true_k}; {} held-out entries of {}",
         test.len(),
         data.n()
     );
-    println!("\n  K   train loglik   held-out predictive loglik (posterior avg)");
+    psgld::log_info!("\n  K   train loglik   held-out predictive loglik (posterior avg)");
 
     let mut best = (0usize, f64::NEG_INFINITY);
     for k in [2usize, 4, 8, 16, 24] {
@@ -86,12 +86,12 @@ fn main() -> psgld::Result<()> {
         }
         let pred = pred_sum / n_samples as f64;
         let train_ll = model.loglik_dense(&s.state().w, &s.state().h(), &train);
-        println!("  {k:<3} {train_ll:>13.4e}  {pred:>13.4e}");
+        psgld::log_info!("  {k:<3} {train_ll:>13.4e}  {pred:>13.4e}");
         if pred > best.1 {
             best = (k, pred);
         }
     }
-    println!(
+    psgld::log_info!(
         "\nselected rank K = {} (held-out predictive peak); true rank was {true_k}",
         best.0
     );

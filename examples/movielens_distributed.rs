@@ -30,7 +30,7 @@ fn main() -> psgld::Result<()> {
 
     let (k, b, t) = (50usize, 15usize, 300u64);
     let csr = movielens::movielens_like(scale, k, 99);
-    println!(
+    psgld::log_info!(
         "ratings matrix: {} movies x {} users, {} ratings ({:.2}% dense), mean {:.2}",
         csr.rows(),
         csr.cols(),
@@ -49,7 +49,7 @@ fn main() -> psgld::Result<()> {
     // --- distributed PSGLD on the simulated 15-node cluster -----------
     let net = NetworkModel::paper_cluster();
     let compute = ComputeModel::paper_node();
-    println!("\ndistributed PSGLD (B = {b} simulated nodes, ring H-rotation):");
+    psgld::log_info!("\ndistributed PSGLD (B = {b} simulated nodes, ring H-rotation):");
     let rep = psgld_distributed_full(&csr, &model, b, &run, 7, &net, &compute, |s| {
         rmse_sparse(&s.w, &s.h(), &csr)
     })?;
@@ -59,18 +59,18 @@ fn main() -> psgld::Result<()> {
         .iter()
         .zip(trace.seconds.iter().zip(&trace.values))
     {
-        println!("  iter {it:>4}  vclock {sec:>8.2}s  RMSE {rmse:.4}");
+        psgld::log_info!("  iter {it:>4}  vclock {sec:>8.2}s  RMSE {rmse:.4}");
     }
-    println!(
+    psgld::log_info!(
         "  virtual time {:.1}s = {:.1}s compute + {:.2}s communication",
         rep.virtual_seconds, rep.compute_seconds, rep.comm_seconds
     );
 
     // --- DSGD baseline (same partitioning, no Langevin noise) ---------
-    println!("\nDSGD baseline (same grid, shared-memory):");
+    psgld::log_info!("\nDSGD baseline (same grid, shared-memory):");
     let mut dsgd = Dsgd::new_sparse(&csr, &model, b, run.clone(), 7)?;
     let res = run_sampler(&mut dsgd, &run, |s| rmse_sparse(&s.w, &s.h(), &csr));
-    println!(
+    psgld::log_info!(
         "  final RMSE {:.4} in {:.2}s wall",
         res.trace.last_value(),
         res.sampling_seconds
@@ -78,7 +78,7 @@ fn main() -> psgld::Result<()> {
 
     let final_psgld = trace.last_value();
     let final_dsgd = res.trace.last_value();
-    println!(
+    psgld::log_info!(
         "\nheadline: PSGLD (a full Bayesian sampler) reaches RMSE {final_psgld:.4} vs \
          DSGD's {final_dsgd:.4};\nthe paper's point — the sampler is not \
          meaningfully slower than the optimiser — holds when the gap is small."

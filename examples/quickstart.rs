@@ -20,7 +20,7 @@ fn main() -> psgld::Result<()> {
 
     // 2. Data: 128x128 counts drawn from the generative model.
     let data = synth::poisson_nmf(128, 128, &model, 42);
-    println!(
+    psgld::log_info!(
         "data: {}x{} Poisson counts, mean {:.2}",
         data.v.rows(),
         data.v.cols(),
@@ -38,12 +38,12 @@ fn main() -> psgld::Result<()> {
         model.loglik_dense(&s.w, &s.h(), &data.v)
     });
     for (it, ll) in res.trace.iters.iter().zip(&res.trace.values) {
-        println!("  iter {it:>5}  loglik {ll:.4e}");
+        psgld::log_info!("  iter {it:>5}  loglik {ll:.4e}");
     }
 
     // 5. Posterior summary.
     let stats = SummaryStats::from_chain(&res.trace.values[res.trace.len() / 2..]);
-    println!(
+    psgld::log_info!(
         "\nposterior loglik: mean {:.4e} ± {:.2e} (ESS {:.0} of {} kept samples)",
         stats.mean,
         stats.sd,
@@ -51,7 +51,7 @@ fn main() -> psgld::Result<()> {
         res.posterior.count()
     );
     let w_mean = res.posterior.w_mean();
-    println!(
+    psgld::log_info!(
         "posterior-mean dictionary: {}x{}, column mass {:.2}..{:.2}",
         w_mean.rows(),
         w_mean.cols(),
@@ -62,7 +62,8 @@ fn main() -> psgld::Result<()> {
             .map(|k| (0..128).map(|i| w_mean.get(i, k)).sum::<f32>())
             .fold(0.0, f32::max),
     );
-    println!("sampling took {:.2}s for 1000 iterations", res.sampling_seconds);
-    println!("final state non-negative: {}", sampler.state().w.as_slice().iter().all(|&x| x >= 0.0));
+    psgld::log_info!("sampling took {:.2}s for 1000 iterations", res.sampling_seconds);
+    let nonneg = sampler.state().w.as_slice().iter().all(|&x| x >= 0.0);
+    psgld::log_info!("final state non-negative: {nonneg}");
     Ok(())
 }

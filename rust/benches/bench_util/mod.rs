@@ -10,8 +10,11 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 /// Time `f` over `reps` runs after `warmup` runs; returns seconds/run
-/// (minimum over runs — least-noise estimator on a busy box).
+/// (minimum over runs — least-noise estimator on a busy box). Under
+/// `--smoke` the counts are scaled down via [`reps`], so every bench
+/// supports the CI trajectory mode without per-site plumbing.
 pub fn time_it(warmup: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    let (warmup, reps) = self::reps(warmup, reps);
     for _ in 0..warmup {
         f();
     }
@@ -24,15 +27,31 @@ pub fn time_it(warmup: usize, reps: usize, mut f: impl FnMut()) -> f64 {
     best
 }
 
+/// `--smoke` on the bench command line: tiny rep counts for CI
+/// trajectory runs (the numbers are noisier but the row set is
+/// identical, which is all the regression gate needs).
+pub fn is_smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Scale `(warmup, reps)` down when running with `--smoke`.
+pub fn reps(warmup: usize, reps: usize) -> (usize, usize) {
+    if is_smoke() {
+        (1, reps.min(3))
+    } else {
+        (warmup, reps)
+    }
+}
+
 /// Report one benchmark row.
 pub fn report(name: &str, seconds: f64, work_items: Option<(f64, &str)>) {
     match work_items {
-        Some((n, unit)) => println!(
+        Some((n, unit)) => psgld::log_info!(
             "{name:<44} {:>12}   {:>14}",
             fmt_s(seconds),
             format!("{:.2e} {unit}/s", n / seconds)
         ),
-        None => println!("{name:<44} {:>12}", fmt_s(seconds)),
+        None => psgld::log_info!("{name:<44} {:>12}", fmt_s(seconds)),
     }
 }
 
@@ -49,9 +68,9 @@ pub fn fmt_s(s: f64) -> String {
 }
 
 pub fn header(title: &str) {
-    println!("\n=== {title} ===");
-    println!("{:<44} {:>12}   {:>14}", "benchmark", "time", "throughput");
-    println!("{}", "-".repeat(76));
+    psgld::log_info!("\n=== {title} ===");
+    psgld::log_info!("{:<44} {:>12}   {:>14}", "benchmark", "time", "throughput");
+    psgld::log_info!("{}", "-".repeat(76));
 }
 
 /// Collects benchmark rows and writes them as a JSON array (one object
@@ -93,8 +112,8 @@ impl JsonSink {
     pub fn write(&self) {
         let body = format!("[\n  {}\n]\n", self.rows.join(",\n  "));
         match std::fs::File::create(&self.path).and_then(|mut f| f.write_all(body.as_bytes())) {
-            Ok(()) => println!("\nwrote {}", self.path.display()),
-            Err(e) => eprintln!("\ncould not write {}: {e}", self.path.display()),
+            Ok(()) => psgld::log_info!("\nwrote {}", self.path.display()),
+            Err(e) => psgld::log_error!("\ncould not write {}: {e}", self.path.display()),
         }
     }
 }
@@ -108,7 +127,7 @@ pub fn write_obs_summary(file: &str) {
     }
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(file);
     match psgld::obs::write_summary(&path) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+        Ok(()) => psgld::log_info!("wrote {}", path.display()),
+        Err(e) => psgld::log_error!("could not write {}: {e}", path.display()),
     }
 }

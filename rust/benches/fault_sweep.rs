@@ -92,7 +92,7 @@ fn main() {
         base.state.ht, sync_state.ht,
         "tau=0/no-fault async H drifted from the synchronous simulator"
     );
-    println!("baseline check: tau=0/no-fault async == synchronous (bitwise) ✓");
+    psgld::log_info!("baseline check: tau=0/no-fault async == synchronous (bitwise) ✓");
 
     header(&format!(
         "fault sweep (B={b}, T={t_total}, {} train / {} holdout nnz{})",
@@ -100,7 +100,7 @@ fn main() {
         held.nnz(),
         if smoke { ", --smoke" } else { "" }
     ));
-    println!(
+    psgld::log_info!(
         "{:>5} {:>11} {:>12} {:>14} {:>16} {:>10} {:>9} {:>12}",
         "tau", "crash_rate", "virt_sec", "iters/vsec", "holdout_loglik", "recov", "max_stale",
         "stall_sec"
@@ -139,13 +139,13 @@ fn main() {
             ) {
                 Ok(r) => r,
                 Err(e) => {
-                    println!("{tau:>5} {rate:>11.3}  failed: {e}");
+                    psgld::log_warn!("{tau:>5} {rate:>11.3}  failed: {e}");
                     continue;
                 }
             };
             let ll = loglik_sparse(&rep.state.w, &rep.state.h(), &held, model.beta, model.phi);
             let throughput = rep.iterations as f64 / rep.virtual_seconds.max(1e-12);
-            println!(
+            psgld::log_info!(
                 "{tau:>5} {rate:>11.3} {:>12.4} {:>14.1} {:>16.2} {:>10} {:>9} {:>12.4}",
                 rep.virtual_seconds,
                 throughput,
@@ -176,8 +176,8 @@ fn main() {
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_fault.json");
     let body = format!("[\n  {}\n]\n", rows.join(",\n  "));
     match std::fs::File::create(&path).and_then(|mut f| f.write_all(body.as_bytes())) {
-        Ok(()) => println!("\nwrote {}", path.display()),
-        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+        Ok(()) => psgld::log_info!("\nwrote {}", path.display()),
+        Err(e) => psgld::log_error!("\ncould not write {}: {e}", path.display()),
     }
 
     // Per-node counters of the fault-free baseline, one JSON object per
@@ -185,7 +185,7 @@ fn main() {
     let nodes_path =
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_fault_nodes.jsonl");
     match base.trace.write_node_stats_jsonl(&nodes_path) {
-        Ok(()) => println!("wrote {}", nodes_path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", nodes_path.display()),
+        Ok(()) => psgld::log_info!("wrote {}", nodes_path.display()),
+        Err(e) => psgld::log_error!("could not write {}: {e}", nodes_path.display()),
     }
 }

@@ -56,7 +56,9 @@ fn main() {
             g.step(t);
         });
         report(&format!("gibbs/I={i}"), s, Some((n, "entries")));
-        println!();
+        psgld::log_info!("");
     }
-    println!("paper claim: PSGLD 700+x faster than Gibbs, 60+x faster than LD/SGLD per T iterations.");
+    psgld::log_info!(
+        "paper claim: PSGLD 700+x faster than Gibbs, 60+x faster than LD/SGLD per T iterations."
+    );
 }

@@ -40,7 +40,7 @@ fn main() {
         p1.step(t);
     });
     report("psgld/beta=1 (specialised)", s1, Some((n / b as f64, "entries")));
-    println!("generic-beta overhead: {:.2}x", s / s1);
+    psgld::log_info!("generic-beta overhead: {:.2}x", s / s1);
 
     let mut ld = Ld::new(&data.v, &model, StepSchedule::Constant { eps: 2e-5 }, 3);
     let mut t = 0u64;

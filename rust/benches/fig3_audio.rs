@@ -46,9 +46,9 @@ fn main() {
     });
     report("gibbs", s_g, Some((n, "entries")));
 
-    println!();
-    println!("10k-sample projections:  psgld {:.1}s   ld {:.1}s   gibbs {:.1}s",
+    psgld::log_info!("");
+    psgld::log_info!("10k-sample projections:  psgld {:.1}s   ld {:.1}s   gibbs {:.1}s",
              s_p * 1e4, s_l * 1e4, s_g * 1e4);
-    println!("ratios vs psgld:         ld {:.0}x   gibbs {:.0}x   (paper: 23x, 152x)",
+    psgld::log_info!("ratios vs psgld:         ld {:.0}x   gibbs {:.0}x   (paper: 23x, 152x)",
              s_l / s_p, s_g / s_p);
 }

@@ -11,7 +11,7 @@
 //! Run: `cargo bench --bench fig5_movielens`
 
 mod bench_util;
-use bench_util::{header, report, time_it, write_obs_summary, JsonSink};
+use bench_util::{header, is_smoke, report, time_it, write_obs_summary, JsonSink};
 
 use psgld::config::{RunConfig, StepSchedule};
 use psgld::data::movielens;
@@ -29,8 +29,11 @@ use psgld::util::parallel::ScratchArena;
 fn main() {
     header("Fig 5: sparse PSGLD vs DSGD per-iteration cost (K=50, B=15)");
     let k = 50usize;
-    let csr = movielens::movielens_like(0.08, k, 1);
-    println!(
+    // --smoke: thin the workload so the CI trajectory run stays fast;
+    // every JSON row is still produced, just on a sparser matrix.
+    let density = if is_smoke() { 0.02 } else { 0.08 };
+    let csr = movielens::movielens_like(density, k, 1);
+    psgld::log_info!(
         "workload: {}x{} sparse, {} nnz\n",
         csr.rows(),
         csr.cols(),
@@ -73,13 +76,13 @@ fn main() {
     report("langevin noise alone ((I+J)K draws)", s_n, Some((noise_entries, "draws")));
     json.push("fig5/langevin_noise", s_n, Some((noise_entries, "draws")), 1);
 
-    println!();
-    println!(
+    psgld::log_info!("");
+    psgld::log_info!(
         "psgld/dsgd ratio {:.2}x; noise accounts for {:.0}% of the gap",
         s_p / s_d,
         100.0 * s_n / (s_p - s_d).max(1e-12)
     );
-    println!(
+    psgld::log_info!(
         "(at the paper's full ML-10M scale the grad work grows 150x while the\n\
          noise only grows 12x, so the ratio approaches the paper's parity)"
     );
@@ -96,7 +99,7 @@ fn main() {
     let mut gw = vec![0f32; m * k];
     let mut ght = vec![0f32; n * k];
     let nnz = blk.nnz() as f64;
-    println!("block (0,0): {}x{} rows/cols, {} nnz, K={}", m, n, blk.nnz(), k);
+    psgld::log_info!("block (0,0): {}x{} rows/cols, {} nnz, K={}", m, n, blk.nnz(), k);
 
     // the pre-PR layout: one (row, col, val) triple per entry
     let (mut rows, mut cols, mut vals) = (Vec::new(), Vec::new(), Vec::new());
@@ -141,8 +144,8 @@ fn main() {
     json.push("sparse_grads/after-csr-simd", s_csr_simd, Some((nnz, "nnz")), 1);
 
     let speedup = s_coo / s_csr_simd;
-    println!();
-    println!(
+    psgld::log_info!("");
+    psgld::log_info!(
         "active tier: {tier:?}; CSR layout alone {:.2}x, CSR+SIMD {speedup:.2}x \
          over the pre-PR scalar COO walk",
         s_coo / s_csr_scalar

@@ -27,11 +27,11 @@ fn main() {
     let compute = ComputeModel::paper_node();
     let wl = TimingWorkload::ml10m(50);
 
-    println!("\nFig 6(a) strong scaling (100 samples, virtual seconds):");
-    println!("  nodes   total      compute    comm");
+    psgld::log_info!("\nFig 6(a) strong scaling (100 samples, virtual seconds):");
+    psgld::log_info!("  nodes   total      compute    comm");
     for &b in &[5usize, 15, 30, 45, 60, 75, 90, 105, 120] {
         let rep = psgld_distributed_timing(&wl, b, 100, &net, &compute);
-        println!(
+        psgld::log_info!(
             "  {b:>5}   {:>8.3}s  {:>8.3}s  {:>8.3}s",
             rep.virtual_seconds, rep.compute_seconds, rep.comm_seconds
         );
@@ -43,12 +43,12 @@ fn main() {
         );
     }
 
-    println!("\nFig 6(b) weak scaling (T = 10, data x4 & nodes x2 per step):");
-    println!("  nodes   nnz     total");
+    psgld::log_info!("\nFig 6(b) weak scaling (T = 10, data x4 & nodes x2 per step):");
+    psgld::log_info!("  nodes   nnz     total");
     for s in 0..4u32 {
         let w = wl.doubled(s);
         let rep = psgld_distributed_timing(&w, 15 << s, 10, &net, &compute);
-        println!(
+        psgld::log_info!(
             "  {:>5}   {:>4.0}M   {:>8.3}s",
             15usize << s,
             w.nnz as f64 / 1e6,
@@ -62,10 +62,10 @@ fn main() {
         );
     }
 
-    println!("\nDSGLD communication comparison (15 nodes, 100 iters):");
+    psgld::log_info!("\nDSGLD communication comparison (15 nodes, 100 iters):");
     let p = psgld_distributed_timing(&wl, 15, 100, &net, &compute);
     let d = dsgld_distributed_timing(&wl, 15, 44_444, 2, 100, &net, &compute);
-    println!(
+    psgld::log_info!(
         "  psgld comm {:.3}s   dsgld comm {:.3}s   ratio {:.0}x",
         p.comm_seconds,
         d.comm_seconds,
@@ -100,7 +100,7 @@ fn main() {
     }
     let (pool_s, spawn_s) = (results[0].1, results[1].1);
     let ratio = spawn_s / pool_s;
-    println!("persistent pool speedup over spawn-per-step: {ratio:.2}x");
+    psgld::log_info!("persistent pool speedup over spawn-per-step: {ratio:.2}x");
     // encoded so ops_per_s == the speedup ratio
     json.push("psgld_step/pool_vs_spawn_ratio", 1.0 / ratio, Some((1.0, "x")), threads);
 

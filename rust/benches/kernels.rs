@@ -82,7 +82,7 @@ fn main() {
         });
         report("dense_grads/arena+nonneg", s_nonneg, Some(((m * n) as f64, "entries")));
         json.push("dense_grads/arena+nonneg", s_nonneg, Some(((m * n) as f64, "entries")), 1);
-        println!(
+        psgld::log_info!(
             "arena reuse speedup over alloc-per-call: {:.2}x (nonneg path {:.2}x)",
             s_alloc / s_arena,
             s_alloc / s_nonneg

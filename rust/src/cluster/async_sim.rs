@@ -226,14 +226,14 @@ impl AsyncSim<'_> {
             return Ok(());
         }
         self.ledger.record(i, t, staleness)?;
-        self.exec_update(i, t, j);
+        self.exec_update(i, t, j, staleness);
         Ok(())
     }
 
     /// Apply node `i`'s block update for iteration `t` (stripe pair
-    /// `(i, j)`), capture the result into iteration `t`'s slot, and
-    /// schedule the compute-phase finish.
-    fn exec_update(&mut self, i: usize, t: u64, j: usize) {
+    /// `(i, j)`, executing at `staleness`), capture the result into
+    /// iteration `t`'s slot, and schedule the compute-phase finish.
+    fn exec_update(&mut self, i: usize, t: u64, j: usize, staleness: u64) {
         let k = self.k;
         let rows = self.grid.row_range(i);
         let cols = self.grid.col_range(j);
@@ -289,6 +289,7 @@ impl AsyncSim<'_> {
             .block_time_s(self.blocked.block(i, j).nnz(), (m + n) * k);
         let dur = base * self.plan.slowdown(i, t);
         self.busy_s += dur;
+        crate::monitor::observe_node_exec(i, t, staleness, self.cfg.tau, dur);
         self.queue.push(self.now + dur, EventKind::NodeFinish { node: i, t });
         if self.vt_on {
             self.vt.push(VtEvent {
@@ -344,6 +345,7 @@ impl AsyncSim<'_> {
                 };
                 self.stats[i].msgs_sent += 1;
                 obs::counter_add(Counter::MsgsSent, 1);
+                crate::monitor::observe_node_msgs(i, t, 1, 0);
                 self.send(msg)?;
             }
         }
@@ -357,6 +359,7 @@ impl AsyncSim<'_> {
         if msg.attempt < drops {
             self.stats[msg.from].msgs_dropped += 1;
             obs::counter_add(Counter::MsgsDropped, 1);
+            crate::monitor::observe_node_msgs(msg.from, msg.produced_at, 0, 1);
             if self.vt_on {
                 self.vt.push(VtEvent {
                     name: "msg_dropped",
@@ -417,6 +420,7 @@ impl AsyncSim<'_> {
                 let staleness = (t - 1).saturating_sub(self.cache[msg.to][msg.block].version);
                 if staleness <= self.cfg.tau {
                     self.stats[msg.to].stall_seconds += self.now - st.since;
+                    crate::monitor::observe_node_stall(msg.to, self.now - st.since);
                     if self.vt_on {
                         self.vt.push(VtEvent {
                             name: "stall",
@@ -487,6 +491,7 @@ impl AsyncSim<'_> {
             // silently undercounts in faulty runs.
             if let Some(st) = node.stalled {
                 self.stats[i].stall_seconds += self.now - st.since;
+                crate::monitor::observe_node_stall(i, self.now - st.since);
                 if self.vt_on {
                     self.vt.push(VtEvent {
                         name: "stall",

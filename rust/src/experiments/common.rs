@@ -25,6 +25,10 @@ pub struct ExpOptions {
     /// Write a Chrome/Perfetto trace-event JSON here after the run
     /// (implies `PALLAS_OBS=full` unless the env var says otherwise).
     pub trace_out: Option<PathBuf>,
+    /// Serve the OpenMetrics exposition at this address for the run's
+    /// duration (implies `PALLAS_OBS=counters` unless the env var says
+    /// otherwise). Resolved from `--metrics-addr` / `PALLAS_METRICS_ADDR`.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ExpOptions {
@@ -37,6 +41,7 @@ impl Default for ExpOptions {
             iters: None,
             gibbs: true,
             trace_out: None,
+            metrics_addr: None,
         }
     }
 }

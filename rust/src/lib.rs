@@ -47,6 +47,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod monitor;
 pub mod obs;
 pub mod partition;
 pub mod rng;

@@ -28,6 +28,9 @@ COMMANDS:
     ablations         schedule / mirroring / B / backend ablations
     all               every experiment in sequence
     validate-trace PATH   schema-check a trace JSON written by --trace-out
+    check-regression  compare fresh bench/health JSON against baselines:
+                      --baseline PATH --current PATH [--tol-frac F]
+                      (exit 1 when a metric drops below baseline*(1-F))
     help              this text
 
 OPTIONS:
@@ -39,9 +42,12 @@ OPTIONS:
     --no-gibbs        skip the Gibbs comparator
     --trace-out PATH  write a Perfetto/Chrome trace-event JSON timeline
                       (implies PALLAS_OBS=full unless PALLAS_OBS is set)
+    --metrics-addr A  serve OpenMetrics at http://A/metrics for the run
+                      (implies PALLAS_OBS=counters unless PALLAS_OBS is set)
 
 ENVIRONMENT:
     PALLAS_OBS        off | counters | full   instrumentation level [off]
+    PALLAS_METRICS_ADDR   addr:port to serve OpenMetrics (same as --metrics-addr)
     PALLAS_LOG        off | error | warn | info | debug   log level [info]
     PALLAS_THREADS    worker pool width (0/1 = sequential)
     PALLAS_SIMD       scalar | avx2 | auto    kernel dispatch tier [auto]
@@ -51,6 +57,8 @@ EXAMPLES:
     psgld fig2a --iters 1000
     psgld fig5 --full --out results/full
     PALLAS_OBS=full psgld fig5 --iters 30 --trace-out results/fig5_trace.json
+    psgld fig5 --metrics-addr 127.0.0.1:9464   # curl http://127.0.0.1:9464/metrics
+    psgld check-regression --baseline baselines --current results --tol-frac 0.2
 ";
 
 fn parse_opts(args: &[String]) -> Result<ExpOptions, String> {
@@ -89,6 +97,13 @@ fn parse_opts(args: &[String]) -> Result<ExpOptions, String> {
                 opts.trace_out = Some(PathBuf::from(
                     it.next().ok_or_else(|| "--trace-out needs a value".to_string())?,
                 ))
+            }
+            "--metrics-addr" => {
+                opts.metrics_addr = Some(
+                    it.next()
+                        .ok_or_else(|| "--metrics-addr needs a value".to_string())?
+                        .clone(),
+                )
             }
             other => return Err(format!("unknown option '{other}'")),
         }
@@ -150,8 +165,68 @@ fn validate_trace_cmd(path: &str) -> psgld::Result<()> {
     Ok(())
 }
 
+/// `check-regression --baseline PATH --current PATH [--tol-frac F]`:
+/// compare bench/health JSON against committed baselines. Returns
+/// whether the comparison passed.
+fn check_regression_cmd(args: &[String]) -> Result<bool, String> {
+    let mut baseline: Option<PathBuf> = None;
+    let mut current: Option<PathBuf> = None;
+    let mut tol_frac = 0.2f64;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--baseline" => {
+                baseline = Some(PathBuf::from(
+                    it.next().ok_or_else(|| "--baseline needs a value".to_string())?,
+                ))
+            }
+            "--current" => {
+                current = Some(PathBuf::from(
+                    it.next().ok_or_else(|| "--current needs a value".to_string())?,
+                ))
+            }
+            "--tol-frac" => {
+                tol_frac = it
+                    .next()
+                    .ok_or_else(|| "--tol-frac needs a value".to_string())?
+                    .parse()
+                    .map_err(|e| format!("bad --tol-frac: {e}"))?
+            }
+            other => return Err(format!("unknown check-regression option '{other}'")),
+        }
+    }
+    let baseline = baseline.ok_or_else(|| "check-regression needs --baseline".to_string())?;
+    let current = current.ok_or_else(|| "check-regression needs --current".to_string())?;
+    let report = psgld::monitor::check_regression(&baseline, &current, tol_frac)
+        .map_err(|e| e.to_string())?;
+    for skip in &report.skipped {
+        psgld::log_warn!("check-regression: skipped {skip}");
+    }
+    for r in &report.regressions {
+        psgld::log_error!(
+            "REGRESSION {}:{} = {:.4} vs baseline {:.4} ({:.1}% of baseline, \
+             tolerance {:.1}%)",
+            r.file,
+            r.key,
+            r.current,
+            r.baseline,
+            100.0 * r.ratio(),
+            100.0 * (1.0 - tol_frac),
+        );
+    }
+    psgld::log_info!(
+        "check-regression: {} compared, {} regressed, {} skipped (tol {:.0}%)",
+        report.compared,
+        report.regressions.len(),
+        report.skipped.len(),
+        100.0 * tol_frac,
+    );
+    Ok(report.passed())
+}
+
 /// Write the observability artifacts after a run: the Perfetto trace
-/// (when `--trace-out` was given) and the per-run summary JSON.
+/// (when `--trace-out` was given), the per-run summary JSON, and the
+/// monitor's health/exposition files.
 fn write_obs_artifacts(opts: &ExpOptions) -> psgld::Result<()> {
     if psgld::obs::level() == psgld::obs::ObsLevel::Off {
         return Ok(());
@@ -163,11 +238,29 @@ fn write_obs_artifacts(opts: &ExpOptions) -> psgld::Result<()> {
     let summary = opts.outdir.join("obs_summary.json");
     psgld::obs::write_summary(&summary)?;
     println!("  wrote {}", summary.display());
+    let prom = opts.outdir.join("metrics.prom");
+    std::fs::write(&prom, psgld::monitor::render_openmetrics())?;
+    println!("  wrote {}", prom.display());
+    let health = opts.outdir.join("health.jsonl");
+    let n_events = psgld::monitor::write_health_jsonl(&health)?;
+    println!("  wrote {} ({n_events} health events)", health.display());
+    let health_summary = opts.outdir.join("health_summary.json");
+    std::fs::write(
+        &health_summary,
+        psgld::monitor::health_summary_json().to_string_pretty(),
+    )?;
+    println!("  wrote {}", health_summary.display());
     Ok(())
 }
 
 fn dispatch(cmd: &str, opts: &ExpOptions) -> psgld::Result<()> {
     std::fs::create_dir_all(&opts.outdir)?;
+    // Held across the whole run so a scraper can watch it live;
+    // dropped (and the port released) on the way out.
+    let _metrics_server = match &opts.metrics_addr {
+        Some(addr) => Some(psgld::monitor::MetricsServer::spawn(addr)?),
+        None => None,
+    };
     match cmd {
         "quickstart" => quickstart(opts)?,
         "fig2a" => {
@@ -233,15 +326,31 @@ fn main() -> ExitCode {
             }
         };
     }
-    let opts = match parse_opts(&args[1..]) {
+    if cmd == "check-regression" {
+        return match check_regression_cmd(&args[1..]) {
+            Ok(true) => ExitCode::SUCCESS,
+            Ok(false) => ExitCode::FAILURE,
+            Err(e) => {
+                eprintln!("error: {e}\n\n{HELP}");
+                ExitCode::from(2)
+            }
+        };
+    }
+    let mut opts = match parse_opts(&args[1..]) {
         Ok(o) => o,
         Err(e) => {
             eprintln!("error: {e}\n\n{HELP}");
             return ExitCode::from(2);
         }
     };
+    if opts.metrics_addr.is_none() {
+        opts.metrics_addr =
+            std::env::var("PALLAS_METRICS_ADDR").ok().filter(|a| !a.is_empty());
+    }
     if opts.trace_out.is_some() && std::env::var_os("PALLAS_OBS").is_none() {
         psgld::obs::set_level_override(Some(psgld::obs::ObsLevel::Full));
+    } else if opts.metrics_addr.is_some() && std::env::var_os("PALLAS_OBS").is_none() {
+        psgld::obs::set_level_override(Some(psgld::obs::ObsLevel::Counters));
     }
     match dispatch(cmd, &opts) {
         Ok(()) => ExitCode::SUCCESS,

@@ -5,6 +5,7 @@
 use std::io::Write;
 use std::path::Path;
 
+use crate::util::Json;
 use crate::Result;
 
 /// Per-node robustness counters collected by the async cluster
@@ -34,6 +35,34 @@ pub struct NodeStats {
     pub max_staleness: u64,
     /// Mean staleness over the node's executed iterations.
     pub mean_staleness: f64,
+}
+
+impl NodeStats {
+    /// Canonical `(column, value)` row shared by the CSV and JSONL
+    /// writers, in CSV column order. Non-finite floats map to
+    /// [`Json::Null`] so both formats degrade identically (an empty
+    /// CSV cell, a JSON `null`).
+    fn row(&self) -> [(&'static str, Json); 10] {
+        fn float(x: f64) -> Json {
+            if x.is_finite() {
+                Json::num(x)
+            } else {
+                Json::Null
+            }
+        }
+        [
+            ("node", Json::num(self.node as f64)),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("stalls", Json::num(self.stalls as f64)),
+            ("stall_seconds", float(self.stall_seconds)),
+            ("recoveries", Json::num(self.recoveries as f64)),
+            ("msgs_sent", Json::num(self.msgs_sent as f64)),
+            ("msgs_dropped", Json::num(self.msgs_dropped as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("max_staleness", Json::num(self.max_staleness as f64)),
+            ("mean_staleness", float(self.mean_staleness)),
+        ]
+    }
 }
 
 /// A named series of (iteration, seconds, value) observations.
@@ -116,31 +145,28 @@ impl Trace {
 
     /// Write the per-node robustness counters as CSV (one row per node,
     /// with a header). No-op columns are still written so downstream
-    /// plotting stays schema-stable.
+    /// plotting stays schema-stable. Non-finite floats (possible only
+    /// on a zero-iteration node's `mean_staleness`) become empty cells,
+    /// mirroring the JSONL writer's `null` — both render from
+    /// [`NodeStats::row`].
     pub fn write_node_stats_csv(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(
-            f,
-            "node,iterations,stalls,stall_seconds,recoveries,msgs_sent,msgs_dropped,retries,max_staleness,mean_staleness"
-        )?;
+        let header: Vec<&str> =
+            NodeStats::default().row().iter().map(|&(name, _)| name).collect();
+        writeln!(f, "{}", header.join(","))?;
         for s in &self.node_stats {
-            writeln!(
-                f,
-                "{},{},{},{},{},{},{},{},{},{}",
-                s.node,
-                s.iterations,
-                s.stalls,
-                s.stall_seconds,
-                s.recoveries,
-                s.msgs_sent,
-                s.msgs_dropped,
-                s.retries,
-                s.max_staleness,
-                s.mean_staleness
-            )?;
+            let cells: Vec<String> = s
+                .row()
+                .iter()
+                .map(|(_, v)| match v {
+                    Json::Null => String::new(),
+                    other => other.to_string_compact(),
+                })
+                .collect();
+            writeln!(f, "{}", cells.join(","))?;
         }
         Ok(())
     }
@@ -149,46 +175,27 @@ impl Trace {
     /// object per node per line, so `BENCH_fault.json`-style tooling
     /// can consume them without CSV parsing.
     ///
-    /// Schema (every field always present, one object per node):
+    /// Schema (every field always present, one object per node; keys
+    /// serialise alphabetically):
     ///
     /// ```json
-    /// {"node": 0, "iterations": 40, "stalls": 3, "stall_seconds": 0.25,
-    ///  "recoveries": 1, "msgs_sent": 39, "msgs_dropped": 2, "retries": 2,
-    ///  "max_staleness": 2, "mean_staleness": 0.5}
+    /// {"iterations":40,"max_staleness":2,"mean_staleness":0.5,
+    ///  "msgs_dropped":2,"msgs_sent":39,"node":0,"recoveries":1,
+    ///  "retries":2,"stall_seconds":0.25,"stalls":3}
     /// ```
     ///
     /// Integer fields are JSON integers; `stall_seconds` and
     /// `mean_staleness` are JSON numbers (`null` if non-finite, which
-    /// can only happen on a zero-iteration node).
+    /// can only happen on a zero-iteration node). Rows render from the
+    /// same [`NodeStats::row`] helper as the CSV writer.
     pub fn write_node_stats_jsonl(&self, path: &Path) -> Result<()> {
-        fn jnum(x: f64) -> String {
-            if x.is_finite() {
-                format!("{x}")
-            } else {
-                "null".to_string()
-            }
-        }
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         for s in &self.node_stats {
-            writeln!(
-                f,
-                "{{\"node\":{},\"iterations\":{},\"stalls\":{},\"stall_seconds\":{},\
-                 \"recoveries\":{},\"msgs_sent\":{},\"msgs_dropped\":{},\"retries\":{},\
-                 \"max_staleness\":{},\"mean_staleness\":{}}}",
-                s.node,
-                s.iterations,
-                s.stalls,
-                jnum(s.stall_seconds),
-                s.recoveries,
-                s.msgs_sent,
-                s.msgs_dropped,
-                s.retries,
-                s.max_staleness,
-                jnum(s.mean_staleness)
-            )?;
+            let obj = Json::obj(s.row().to_vec());
+            writeln!(f, "{}", obj.to_string_compact())?;
         }
         Ok(())
     }
@@ -323,6 +330,59 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("node,iterations,stalls"));
         assert!(text.contains("1,40,3,0.25,1,39,2,2,2,0.5"));
+    }
+
+    #[test]
+    fn node_stats_csv_non_finite_is_empty_cell() {
+        let dir = std::env::temp_dir().join("psgld_trace_test");
+        let path = dir.join("nodes_nan.csv");
+        let mut t = Trace::new("async");
+        t.node_stats.push(NodeStats {
+            node: 2,
+            mean_staleness: f64::NAN,
+            ..NodeStats::default()
+        });
+        t.write_node_stats_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let row = text.lines().nth(1).unwrap();
+        // same degradation as the JSONL null: the cell is empty, and
+        // the row still has all 10 columns
+        assert_eq!(row, "2,0,0,0,0,0,0,0,0,");
+        assert_eq!(row.split(',').count(), 10);
+    }
+
+    #[test]
+    fn node_stats_csv_and_jsonl_share_one_row_schema() {
+        let stats = NodeStats {
+            node: 3,
+            iterations: 7,
+            stalls: 1,
+            stall_seconds: 1.5,
+            recoveries: 0,
+            msgs_sent: 6,
+            msgs_dropped: 0,
+            retries: 0,
+            max_staleness: 1,
+            mean_staleness: 0.25,
+        };
+        let dir = std::env::temp_dir().join("psgld_trace_test");
+        let csv_path = dir.join("row_schema.csv");
+        let jsonl_path = dir.join("row_schema.jsonl");
+        let mut t = Trace::new("async");
+        t.node_stats.push(stats);
+        t.write_node_stats_csv(&csv_path).unwrap();
+        t.write_node_stats_jsonl(&jsonl_path).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        let jsonl = std::fs::read_to_string(&jsonl_path).unwrap();
+        let header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
+        let cells: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        let obj = crate::util::Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        // every CSV column exists as a JSONL field with the same
+        // serialised value
+        for (name, cell) in header.iter().zip(&cells) {
+            let field = obj.field(name).unwrap();
+            assert_eq!(&field.to_string_compact(), cell, "column {name}");
+        }
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Declarative alert rules over the streaming health statistics.
+//!
+//! The engine is evaluated from the monitor feed after each sample /
+//! node event. Rules are data, not code: each carries its thresholds
+//! and a per-(rule, subject) cooldown measured in iterations, so a
+//! persistent condition fires exactly once per cooldown window and the
+//! suppressed count is reported on the next firing.
+
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+
+/// Alert severity, ordered least to most severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Critical,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Critical => "critical",
+        }
+    }
+}
+
+/// One declarative health rule. All cooldowns are in iterations of the
+/// subject's own clock (sampler iteration `t` for chain rules, node
+/// iteration for node rules).
+#[derive(Clone, Debug)]
+pub enum AlertRule {
+    /// The monitored scalar (loglik / RMSE) went NaN or infinite.
+    NonFiniteValue { cooldown: u64 },
+    /// Windowed ESS per second dropped below `floor`.
+    EssPerSecBelow { floor: f64, min_samples: u64, cooldown: u64 },
+    /// Split-R̂ (across chains when available, else window halves)
+    /// exceeds `threshold` after `warmup_iters`.
+    SplitRhatAbove { threshold: f64, warmup_iters: u64, min_samples: u64, cooldown: u64 },
+    /// A node spends more than `ratio` of its virtual time stalled.
+    StallTimeRatioAbove { ratio: f64, min_execs: u64, cooldown: u64 },
+    /// A node ran at staleness == tau for `k` consecutive executions
+    /// (only meaningful when tau > 0: the bound is actively binding).
+    StalenessPinned { k: u64, cooldown: u64 },
+    /// Dropped-to-sent message ratio exceeded `ratio`.
+    MsgsDroppedRatioAbove { ratio: f64, min_sent: u64, cooldown: u64 },
+}
+
+impl AlertRule {
+    /// Stable machine-readable rule identifier (JSONL `rule` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlertRule::NonFiniteValue { .. } => "non_finite_value",
+            AlertRule::EssPerSecBelow { .. } => "ess_per_sec_below",
+            AlertRule::SplitRhatAbove { .. } => "split_rhat_above",
+            AlertRule::StallTimeRatioAbove { .. } => "stall_time_ratio_above",
+            AlertRule::StalenessPinned { .. } => "staleness_pinned",
+            AlertRule::MsgsDroppedRatioAbove { .. } => "msgs_dropped_ratio",
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        match self {
+            AlertRule::NonFiniteValue { .. } => Severity::Critical,
+            AlertRule::SplitRhatAbove { .. } => Severity::Warn,
+            AlertRule::EssPerSecBelow { .. } => Severity::Warn,
+            AlertRule::StallTimeRatioAbove { .. } => Severity::Warn,
+            AlertRule::StalenessPinned { .. } => Severity::Warn,
+            AlertRule::MsgsDroppedRatioAbove { .. } => Severity::Warn,
+        }
+    }
+
+    pub fn cooldown(&self) -> u64 {
+        match *self {
+            AlertRule::NonFiniteValue { cooldown }
+            | AlertRule::EssPerSecBelow { cooldown, .. }
+            | AlertRule::SplitRhatAbove { cooldown, .. }
+            | AlertRule::StallTimeRatioAbove { cooldown, .. }
+            | AlertRule::StalenessPinned { cooldown, .. }
+            | AlertRule::MsgsDroppedRatioAbove { cooldown, .. } => cooldown,
+        }
+    }
+
+    /// Conservative default rule set: guaranteed quiet on a healthy
+    /// run. Chain-trend rules (`EssPerSecBelow`, `SplitRhatAbove`) are
+    /// workload-specific — a short monitored transient trips them on
+    /// perfectly healthy burn-in — so they ship disabled and are opted
+    /// into via [`crate::monitor::set_rules`].
+    pub fn default_set() -> Vec<AlertRule> {
+        vec![
+            AlertRule::NonFiniteValue { cooldown: 100 },
+            AlertRule::StallTimeRatioAbove { ratio: 0.9, min_execs: 16, cooldown: 100 },
+            AlertRule::StalenessPinned { k: 16, cooldown: 100 },
+            AlertRule::MsgsDroppedRatioAbove { ratio: 0.25, min_sent: 20, cooldown: 100 },
+        ]
+    }
+}
+
+/// Per-sample context handed to the chain rules.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCtx {
+    pub chain: usize,
+    pub t: u64,
+    pub value: f64,
+    pub samples: u64,
+    /// Latest windowed ESS/sec (NaN until computable).
+    pub ess_per_sec: f64,
+    /// Latest split-R̂ (None until enough samples).
+    pub split_rhat: Option<f64>,
+}
+
+/// Per-execution context handed to the node rules.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeCtx {
+    pub node: usize,
+    pub t: u64,
+    pub execs: u64,
+    pub staleness: u64,
+    pub tau: u64,
+    pub consecutive_at_tau: u64,
+    /// stall / (stall + busy) virtual time (NaN until any time accrues).
+    pub stall_ratio: f64,
+    pub msgs_sent: u64,
+    pub msgs_dropped: u64,
+}
+
+/// A fired alert, ready for JSONL serialisation.
+#[derive(Clone, Debug)]
+pub struct HealthEvent {
+    pub severity: Severity,
+    pub rule: &'static str,
+    /// `chain<i>` or `node<i>`.
+    pub subject: String,
+    /// Iteration at which the rule fired.
+    pub t: u64,
+    /// Observed value that tripped the rule (NaN serialises as null).
+    pub value: f64,
+    /// Threshold the rule compared against.
+    pub threshold: f64,
+    pub message: String,
+    /// Evaluations suppressed by the cooldown since the previous
+    /// firing of this (rule, subject) pair.
+    pub suppressed_since_last: u64,
+}
+
+impl HealthEvent {
+    pub fn to_json(&self) -> Json {
+        fn num(x: f64) -> Json {
+            if x.is_finite() {
+                Json::num(x)
+            } else {
+                Json::Null
+            }
+        }
+        Json::obj(vec![
+            ("schema", Json::Str("psgld-health/1".to_string())),
+            ("severity", Json::Str(self.severity.name().to_string())),
+            ("rule", Json::Str(self.rule.to_string())),
+            ("subject", Json::Str(self.subject.clone())),
+            ("t", Json::num(self.t as f64)),
+            ("value", num(self.value)),
+            ("threshold", num(self.threshold)),
+            ("message", Json::Str(self.message.clone())),
+            ("suppressed_since_last", Json::num(self.suppressed_since_last as f64)),
+        ])
+    }
+}
+
+/// Subject identifier: chain and node index spaces must not collide in
+/// the cooldown map.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Subject {
+    Chain(usize),
+    Node(usize),
+}
+
+impl Subject {
+    fn label(self) -> String {
+        match self {
+            Subject::Chain(i) => format!("chain{i}"),
+            Subject::Node(i) => format!("node{i}"),
+        }
+    }
+}
+
+/// Evaluates rules, applies per-(rule, subject) cooldowns, and retains
+/// the fired events for export.
+#[derive(Clone, Debug)]
+pub struct AlertEngine {
+    rules: Vec<AlertRule>,
+    last_fire: BTreeMap<(usize, Subject), u64>,
+    suppressed: BTreeMap<(usize, Subject), u64>,
+    events: Vec<HealthEvent>,
+}
+
+impl AlertEngine {
+    pub fn new(rules: Vec<AlertRule>) -> Self {
+        AlertEngine {
+            rules,
+            last_fire: BTreeMap::new(),
+            suppressed: BTreeMap::new(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn with_default_rules() -> Self {
+        Self::new(AlertRule::default_set())
+    }
+
+    pub fn set_rules(&mut self, rules: Vec<AlertRule>) {
+        self.rules = rules;
+        self.last_fire.clear();
+        self.suppressed.clear();
+    }
+
+    pub fn rules(&self) -> &[AlertRule] {
+        &self.rules
+    }
+
+    pub fn events(&self) -> &[HealthEvent] {
+        &self.events
+    }
+
+    pub fn count_by_severity(&self, sev: Severity) -> usize {
+        self.events.iter().filter(|e| e.severity == sev).count()
+    }
+
+    /// Evaluate the chain rules against one monitored sample. Returns
+    /// the number of events fired (post-cooldown).
+    pub fn eval_sample(&mut self, ctx: &SampleCtx) -> usize {
+        let subject = Subject::Chain(ctx.chain);
+        let mut fired = 0;
+        for idx in 0..self.rules.len() {
+            let rule = self.rules[idx].clone();
+            match rule {
+                AlertRule::NonFiniteValue { .. } => {
+                    if !ctx.value.is_finite() {
+                        let msg = format!(
+                            "monitored value is {} at t={}",
+                            ctx.value, ctx.t
+                        );
+                        fired += self.try_fire(idx, subject, ctx.t, ctx.value, 0.0, msg);
+                    }
+                }
+                AlertRule::EssPerSecBelow { floor, min_samples, .. } => {
+                    if ctx.samples >= min_samples
+                        && ctx.ess_per_sec.is_finite()
+                        && ctx.ess_per_sec < floor
+                    {
+                        let msg = format!(
+                            "ESS/sec {:.3} below floor {floor:.3} at t={}",
+                            ctx.ess_per_sec, ctx.t
+                        );
+                        fired +=
+                            self.try_fire(idx, subject, ctx.t, ctx.ess_per_sec, floor, msg);
+                    }
+                }
+                AlertRule::SplitRhatAbove {
+                    threshold, warmup_iters, min_samples, ..
+                } => {
+                    if let Some(rhat) = ctx.split_rhat {
+                        if ctx.t >= warmup_iters
+                            && ctx.samples >= min_samples
+                            && rhat.is_finite()
+                            && rhat > threshold
+                        {
+                            let msg = format!(
+                                "split-Rhat {rhat:.4} above {threshold:.4} at t={}",
+                                ctx.t
+                            );
+                            fired +=
+                                self.try_fire(idx, subject, ctx.t, rhat, threshold, msg);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        fired
+    }
+
+    /// Evaluate the node rules against one node execution / message
+    /// update. Returns the number of events fired (post-cooldown).
+    pub fn eval_node(&mut self, ctx: &NodeCtx) -> usize {
+        let subject = Subject::Node(ctx.node);
+        let mut fired = 0;
+        for idx in 0..self.rules.len() {
+            let rule = self.rules[idx].clone();
+            match rule {
+                AlertRule::StallTimeRatioAbove { ratio, min_execs, .. } => {
+                    if ctx.execs >= min_execs
+                        && ctx.stall_ratio.is_finite()
+                        && ctx.stall_ratio > ratio
+                    {
+                        let msg = format!(
+                            "node {} stalled {:.1}% of virtual time (> {:.1}%)",
+                            ctx.node,
+                            100.0 * ctx.stall_ratio,
+                            100.0 * ratio
+                        );
+                        fired +=
+                            self.try_fire(idx, subject, ctx.t, ctx.stall_ratio, ratio, msg);
+                    }
+                }
+                AlertRule::StalenessPinned { k, .. } => {
+                    if ctx.tau > 0 && ctx.consecutive_at_tau >= k {
+                        let msg = format!(
+                            "node {} pinned at staleness tau={} for {} consecutive \
+                             executions",
+                            ctx.node, ctx.tau, ctx.consecutive_at_tau
+                        );
+                        fired += self.try_fire(
+                            idx,
+                            subject,
+                            ctx.t,
+                            ctx.consecutive_at_tau as f64,
+                            k as f64,
+                            msg,
+                        );
+                    }
+                }
+                AlertRule::MsgsDroppedRatioAbove { ratio, min_sent, .. } => {
+                    if ctx.msgs_sent >= min_sent {
+                        let drop_ratio = ctx.msgs_dropped as f64 / ctx.msgs_sent as f64;
+                        if drop_ratio > ratio {
+                            let msg = format!(
+                                "node {} dropped {}/{} messages ({:.1}% > {:.1}%)",
+                                ctx.node,
+                                ctx.msgs_dropped,
+                                ctx.msgs_sent,
+                                100.0 * drop_ratio,
+                                100.0 * ratio
+                            );
+                            fired +=
+                                self.try_fire(idx, subject, ctx.t, drop_ratio, ratio, msg);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        fired
+    }
+
+    /// Fire unless the (rule, subject) pair is still cooling down.
+    /// Returns 1 if an event was recorded.
+    fn try_fire(
+        &mut self,
+        rule_idx: usize,
+        subject: Subject,
+        t: u64,
+        value: f64,
+        threshold: f64,
+        message: String,
+    ) -> usize {
+        let key = (rule_idx, subject);
+        let cooldown = self.rules[rule_idx].cooldown();
+        if let Some(&last) = self.last_fire.get(&key) {
+            if t < last.saturating_add(cooldown) {
+                *self.suppressed.entry(key).or_insert(0) += 1;
+                return 0;
+            }
+        }
+        let suppressed_since_last = self.suppressed.remove(&key).unwrap_or(0);
+        self.last_fire.insert(key, t);
+        self.events.push(HealthEvent {
+            severity: self.rules[rule_idx].severity(),
+            rule: self.rules[rule_idx].name(),
+            subject: subject.label(),
+            t,
+            value,
+            threshold,
+            message,
+            suppressed_since_last,
+        });
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nan_ctx(t: u64) -> SampleCtx {
+        SampleCtx {
+            chain: 0,
+            t,
+            value: f64::NAN,
+            samples: t,
+            ess_per_sec: f64::NAN,
+            split_rhat: None,
+        }
+    }
+
+    #[test]
+    fn nan_rule_fires_once_per_cooldown_window() {
+        let mut eng = AlertEngine::new(vec![AlertRule::NonFiniteValue { cooldown: 100 }]);
+        for t in 1..=300 {
+            eng.eval_sample(&nan_ctx(t));
+        }
+        let events = eng.events();
+        assert_eq!(events.len(), 3, "fired at t=1, 101, 201");
+        assert_eq!(events[0].t, 1);
+        assert_eq!(events[1].t, 101);
+        assert_eq!(events[2].t, 201);
+        assert_eq!(events[0].suppressed_since_last, 0);
+        assert_eq!(events[1].suppressed_since_last, 99);
+        assert_eq!(events[2].suppressed_since_last, 99);
+        assert!(events.iter().all(|e| e.rule == "non_finite_value"));
+        assert!(events.iter().all(|e| e.severity == Severity::Critical));
+    }
+
+    #[test]
+    fn cooldown_is_per_subject() {
+        let mut eng = AlertEngine::new(vec![AlertRule::NonFiniteValue { cooldown: 100 }]);
+        for chain in 0..3 {
+            let mut ctx = nan_ctx(5);
+            ctx.chain = chain;
+            eng.eval_sample(&ctx);
+        }
+        assert_eq!(eng.events().len(), 3, "one event per chain, no cross-talk");
+    }
+
+    #[test]
+    fn finite_values_never_fire() {
+        let mut eng = AlertEngine::with_default_rules();
+        for t in 1..=200 {
+            let mut ctx = nan_ctx(t);
+            ctx.value = -1.5;
+            eng.eval_sample(&ctx);
+        }
+        assert!(eng.events().is_empty());
+    }
+
+    #[test]
+    fn staleness_pinned_requires_positive_tau() {
+        let mut eng = AlertEngine::new(vec![AlertRule::StalenessPinned {
+            k: 4,
+            cooldown: 10,
+        }]);
+        let mut ctx = NodeCtx {
+            node: 1,
+            t: 20,
+            execs: 20,
+            staleness: 0,
+            tau: 0,
+            consecutive_at_tau: 20,
+            stall_ratio: 0.0,
+            msgs_sent: 0,
+            msgs_dropped: 0,
+        };
+        eng.eval_node(&ctx);
+        assert!(eng.events().is_empty(), "tau=0 means the bound is vacuous");
+        ctx.tau = 4;
+        ctx.staleness = 4;
+        eng.eval_node(&ctx);
+        assert_eq!(eng.events().len(), 1);
+        assert_eq!(eng.events()[0].rule, "staleness_pinned");
+        assert_eq!(eng.events()[0].subject, "node1");
+    }
+
+    #[test]
+    fn event_json_maps_non_finite_to_null() {
+        let ev = HealthEvent {
+            severity: Severity::Critical,
+            rule: "non_finite_value",
+            subject: "chain0".to_string(),
+            t: 7,
+            value: f64::NAN,
+            threshold: 0.0,
+            message: "monitored value is NaN at t=7".to_string(),
+            suppressed_since_last: 0,
+        };
+        let j = ev.to_json();
+        assert!(matches!(j.field("value").unwrap(), Json::Null));
+        assert_eq!(j.field("t").unwrap().as_u64().unwrap(), 7);
+        let line = j.to_string_compact();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(
+            parsed.field("rule").unwrap().as_str().unwrap(),
+            "non_finite_value"
+        );
+    }
+}

@@ -1,0 +1,645 @@
+//! Online sampler-health monitor: streaming convergence diagnostics,
+//! anomaly alerts, and OpenMetrics exposition.
+//!
+//! # DESIGN
+//!
+//! The obs layer (ISSUE 9) records *what the code did* — spans,
+//! counters, traces. This module layers *is the sampler healthy?* on
+//! top of it, online, while the run is still burning budget:
+//!
+//! ```text
+//!   run_sampler ──monitored value──▶ observe_sample ─┐
+//!   multichain  ──(with_chain idx)──▶      "         │   ┌───────────┐
+//!   async_sim   ──exec/stall/msgs──▶ observe_node_*  ├──▶│ Monitor   │
+//!                                                    │   │ (mutexed) │
+//!                                                    │   └─────┬─────┘
+//!        streaming estimators: Welford, OnlineRhat,  │         │
+//!        RingWindow → windowed IAT → ESS/sec,        │         ▼
+//!        ReservoirQuantiles (O(1)/bounded memory)    │   AlertEngine
+//!                                                    │   (rules + cooldown)
+//!                                                    │         │
+//!              health.jsonl ◀── structured events ◀──┘         │
+//!              metrics.prom ◀── OpenMetrics render ◀── gauges ◀┘
+//!              (+ optional PALLAS_METRICS_ADDR scrape endpoint)
+//! ```
+//!
+//! ## Contracts
+//!
+//! * **Never perturbs the chain.** The monitor only observes values the
+//!   samplers already compute; it draws randomness from its own derived
+//!   RNG stream and never touches sampler RNGs, schedules, or state. At
+//!   `PALLAS_OBS=off` every entry point is an early-return, so chain
+//!   output is bitwise identical with the monitor compiled in or out.
+//! * **Off the hot path.** Feeds happen at monitor cadence
+//!   (`RunConfig::monitor_every`) and at async-sim virtual events, never
+//!   inside `Psgld::step` — the zero-alloc guarantee of the step hot
+//!   path (`tests/alloc_free.rs`) is untouched.
+//! * **Bounded memory.** Welford is O(1); windows and reservoirs are
+//!   fixed-capacity; the alert engine holds one cooldown slot per
+//!   (rule, subject) pair plus the fired events.
+//! * **Quiet by default.** [`AlertRule::default_set`] only contains
+//!   rules that cannot fire on a healthy run (NaN values, pathological
+//!   stall/staleness/drop regimes). Trend rules (ESS floor, split-R̂
+//!   threshold) are opted in per run via [`set_rules`].
+//!
+//! ## Consumers
+//!
+//! * `main.rs` writes `metrics.prom`, `health.jsonl`, and
+//!   `health_summary.json` next to the other obs artifacts, and serves
+//!   the exposition live when `PALLAS_METRICS_ADDR` (or
+//!   `--metrics-addr`) is set.
+//! * `check-regression` (CLI) compares fresh `BENCH_*.json` /
+//!   `health_summary.json` against committed baselines — see
+//!   [`regression`].
+
+pub mod alert;
+pub mod openmetrics;
+pub mod regression;
+pub mod serve;
+pub mod streaming;
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::obs::logger::{log_event, LogLevel};
+use crate::obs::{self, ObsLevel};
+use crate::util::Json;
+use crate::Result;
+
+pub use alert::{AlertEngine, AlertRule, HealthEvent, NodeCtx, SampleCtx, Severity};
+pub use openmetrics::{lint_openmetrics, render_openmetrics};
+pub use regression::{check_regression, RegressionFinding, RegressionReport};
+pub use serve::MetricsServer;
+pub use streaming::{
+    split_rhat_window, windowed_iat, OnlineRhat, ReservoirQuantiles, RingWindow, Welford,
+};
+
+/// Monitored-value window size per chain (IAT / split-R̂ horizon).
+const WINDOW_CAP: usize = 1024;
+/// Reservoir size for the per-chain value quantiles.
+const RESERVOIR_CAP: usize = 512;
+/// Recompute the windowed IAT every sample below this window size,
+/// then only every [`ESS_REFRESH_EVERY`] samples (the estimator is
+/// O(window²); the gauge does not need per-sample freshness).
+const ESS_CHEAP_BELOW: usize = 256;
+const ESS_REFRESH_EVERY: u64 = 16;
+
+/// The monitor piggybacks on the obs level: active at `counters` and
+/// `full`, a no-op at `off`.
+pub fn enabled() -> bool {
+    obs::level() >= ObsLevel::Counters
+}
+
+thread_local! {
+    static CHAIN: Cell<usize> = Cell::new(0);
+}
+
+/// Run `f` with samples attributed to `chain` (used by the multi-chain
+/// driver so per-chain streams stay separate).
+pub fn with_chain<R>(chain: usize, f: impl FnOnce() -> R) -> R {
+    let prev = CHAIN.with(|c| c.replace(chain));
+    let out = f();
+    CHAIN.with(|c| c.set(prev));
+    out
+}
+
+/// Per-chain streaming health state.
+struct ChainHealth {
+    samples: u64,
+    non_finite: u64,
+    welford: Welford,
+    window: RingWindow,
+    /// Cumulative sampling-seconds aligned with `window` entries.
+    sec_window: RingWindow,
+    quantiles: ReservoirQuantiles,
+    /// Latest windowed ESS/sec (NaN until computable).
+    ess_per_sec: f64,
+}
+
+impl ChainHealth {
+    fn new(chain: usize) -> Self {
+        ChainHealth {
+            samples: 0,
+            non_finite: 0,
+            welford: Welford::new(),
+            window: RingWindow::new(WINDOW_CAP),
+            sec_window: RingWindow::new(WINDOW_CAP),
+            quantiles: ReservoirQuantiles::new(RESERVOIR_CAP, chain as u64),
+            ess_per_sec: f64::NAN,
+        }
+    }
+}
+
+/// Per-node streaming health state (async executor feed).
+#[derive(Default)]
+struct NodeHealth {
+    execs: u64,
+    stalls: u64,
+    busy_s: f64,
+    stall_s: f64,
+    staleness_sum: u64,
+    max_staleness: u64,
+    consecutive_at_tau: u64,
+    tau: u64,
+    last_staleness: u64,
+    msgs_sent: u64,
+    msgs_dropped: u64,
+}
+
+impl NodeHealth {
+    fn stall_ratio(&self) -> f64 {
+        let total = self.busy_s + self.stall_s;
+        if total > 0.0 {
+            self.stall_s / total
+        } else {
+            f64::NAN
+        }
+    }
+
+    fn ctx(&self, node: usize, t: u64) -> NodeCtx {
+        NodeCtx {
+            node,
+            t,
+            execs: self.execs,
+            staleness: self.last_staleness,
+            tau: self.tau,
+            consecutive_at_tau: self.consecutive_at_tau,
+            stall_ratio: self.stall_ratio(),
+            msgs_sent: self.msgs_sent,
+            msgs_dropped: self.msgs_dropped,
+        }
+    }
+}
+
+struct MonitorState {
+    chains: BTreeMap<usize, ChainHealth>,
+    nodes: BTreeMap<usize, NodeHealth>,
+    engine: AlertEngine,
+    context: String,
+    /// Events already forwarded to the obs logger.
+    logged: usize,
+}
+
+impl MonitorState {
+    fn new() -> Self {
+        MonitorState {
+            chains: BTreeMap::new(),
+            nodes: BTreeMap::new(),
+            engine: AlertEngine::with_default_rules(),
+            context: String::new(),
+            logged: 0,
+        }
+    }
+
+    fn observe_sample(&mut self, chain: usize, t: u64, seconds: f64, value: f64) {
+        let ch = self.chains.entry(chain).or_insert_with(|| ChainHealth::new(chain));
+        ch.samples += 1;
+        if value.is_finite() {
+            ch.welford.push(value);
+            ch.window.push(value);
+            ch.sec_window.push(seconds);
+            ch.quantiles.push(value);
+            let n = ch.window.len();
+            if n >= 16 && (n < ESS_CHEAP_BELOW || ch.samples % ESS_REFRESH_EVERY == 0) {
+                let span = seconds - ch.sec_window.front().unwrap_or(seconds);
+                if span > 0.0 {
+                    let iat = windowed_iat(&ch.window);
+                    ch.ess_per_sec = n as f64 / iat / span;
+                }
+            }
+        } else {
+            ch.non_finite += 1;
+        }
+        let samples = ch.samples;
+        let ess_per_sec = ch.ess_per_sec;
+        let split_rhat = self.split_rhat();
+        let ctx = SampleCtx { chain, t, value, samples, ess_per_sec, split_rhat };
+        self.engine.eval_sample(&ctx);
+        self.flush_log();
+    }
+
+    /// Across-chain split-R̂ over the recent windows when at least two
+    /// chains have data, else the single stream's half-vs-half R̂.
+    fn split_rhat(&self) -> Option<f64> {
+        let ready: Vec<&ChainHealth> =
+            self.chains.values().filter(|c| c.window.len() >= 4).collect();
+        match ready.len() {
+            0 => None,
+            1 => split_rhat_window(&ready[0].window),
+            _ => {
+                let windows: Vec<Vec<f64>> =
+                    ready.iter().map(|c| c.window.to_vec()).collect();
+                Some(crate::metrics::diagnostics::gelman_rubin(&windows))
+            }
+        }
+    }
+
+    fn observe_node_exec(
+        &mut self,
+        node: usize,
+        t: u64,
+        staleness: u64,
+        tau: u64,
+        busy_s: f64,
+    ) {
+        let nh = self.nodes.entry(node).or_default();
+        nh.execs += 1;
+        nh.busy_s += busy_s;
+        nh.staleness_sum += staleness;
+        nh.max_staleness = nh.max_staleness.max(staleness);
+        nh.tau = tau;
+        nh.last_staleness = staleness;
+        nh.consecutive_at_tau =
+            if tau > 0 && staleness == tau { nh.consecutive_at_tau + 1 } else { 0 };
+        let ctx = nh.ctx(node, t);
+        self.engine.eval_node(&ctx);
+        self.flush_log();
+    }
+
+    fn observe_node_stall(&mut self, node: usize, stall_s: f64) {
+        let nh = self.nodes.entry(node).or_default();
+        nh.stalls += 1;
+        nh.stall_s += stall_s;
+        // No rule evaluation here: a resolved stall is always followed
+        // by an execution of the same node, which evaluates with the
+        // updated ratio.
+    }
+
+    fn observe_node_msgs(&mut self, node: usize, t: u64, sent: u64, dropped: u64) {
+        let nh = self.nodes.entry(node).or_default();
+        nh.msgs_sent += sent;
+        nh.msgs_dropped += dropped;
+        if dropped > 0 {
+            // Evaluate on drops so a crashed node's spike still alerts
+            // even if it never executes again.
+            let ctx = nh.ctx(node, t);
+            self.engine.eval_node(&ctx);
+            self.flush_log();
+        }
+    }
+
+    /// Forward newly fired events to the obs logger as structured
+    /// single-line JSON records.
+    fn flush_log(&mut self) {
+        let events = self.engine.events();
+        while self.logged < events.len() {
+            let ev = &events[self.logged];
+            let lvl = match ev.severity {
+                Severity::Critical => LogLevel::Error,
+                Severity::Warn => LogLevel::Warn,
+                Severity::Info => LogLevel::Info,
+            };
+            log_event(lvl, &ev.to_json());
+            self.logged += 1;
+        }
+    }
+}
+
+fn lock() -> MutexGuard<'static, MonitorState> {
+    static MONITOR: OnceLock<Mutex<MonitorState>> = OnceLock::new();
+    MONITOR
+        .get_or_init(|| Mutex::new(MonitorState::new()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Feed one monitored sample (loglik / RMSE at a monitor tick).
+/// `seconds` is the cumulative sampling time at the tick. Attribution
+/// to a chain comes from [`with_chain`]; the default is chain 0.
+pub fn observe_sample(t: u64, seconds: f64, value: f64) {
+    if !enabled() {
+        return;
+    }
+    let chain = CHAIN.with(|c| c.get());
+    lock().observe_sample(chain, t, seconds, value);
+}
+
+/// Feed one completed node execution from the async executor.
+pub fn observe_node_exec(node: usize, t: u64, staleness: u64, tau: u64, busy_s: f64) {
+    if !enabled() {
+        return;
+    }
+    lock().observe_node_exec(node, t, staleness, tau, busy_s);
+}
+
+/// Feed one resolved stall interval (virtual seconds) for `node`.
+pub fn observe_node_stall(node: usize, stall_s: f64) {
+    if !enabled() {
+        return;
+    }
+    lock().observe_node_stall(node, stall_s);
+}
+
+/// Feed message-counter deltas for `node` (`t` is the producing
+/// iteration, used as the cooldown clock for drop alerts).
+pub fn observe_node_msgs(node: usize, t: u64, sent: u64, dropped: u64) {
+    if !enabled() {
+        return;
+    }
+    lock().observe_node_msgs(node, t, sent, dropped);
+}
+
+/// Label the current run in the health summary (e.g. sampler name).
+pub fn set_context(label: &str) {
+    if !enabled() {
+        return;
+    }
+    lock().context = label.to_string();
+}
+
+/// Replace the active alert rules (clears cooldown state, keeps the
+/// fired-event history).
+pub fn set_rules(rules: Vec<AlertRule>) {
+    lock().engine.set_rules(rules);
+}
+
+/// Drop all streaming state, events, and cooldowns; restore the
+/// default rule set.
+pub fn reset() {
+    *lock() = MonitorState::new();
+}
+
+/// Snapshot of the fired health events.
+pub fn events() -> Vec<HealthEvent> {
+    lock().engine.events().to_vec()
+}
+
+/// Total fired alerts so far.
+pub fn alerts_total() -> usize {
+    lock().engine.events().len()
+}
+
+/// Point-in-time gauges for one chain.
+#[derive(Clone, Debug)]
+pub struct ChainGauges {
+    pub chain: usize,
+    pub samples: u64,
+    pub non_finite: u64,
+    pub mean: f64,
+    pub sd: f64,
+    pub ess_per_sec: f64,
+    pub q05: f64,
+    pub q50: f64,
+    pub q95: f64,
+}
+
+/// Point-in-time gauges for one async node.
+#[derive(Clone, Debug)]
+pub struct NodeGauges {
+    pub node: usize,
+    pub execs: u64,
+    pub stalls: u64,
+    pub stall_ratio: f64,
+    pub mean_staleness: f64,
+    pub max_staleness: u64,
+    pub consecutive_at_tau: u64,
+    pub msgs_sent: u64,
+    pub msgs_dropped: u64,
+}
+
+/// Everything the exposition / summary needs, copied out of the lock.
+#[derive(Clone, Debug)]
+pub struct HealthSnapshot {
+    pub context: String,
+    pub chains: Vec<ChainGauges>,
+    pub nodes: Vec<NodeGauges>,
+    pub split_rhat: Option<f64>,
+    /// Sum of the per-chain windowed ESS/sec (None until any chain has
+    /// a finite estimate).
+    pub ess_per_sec: Option<f64>,
+    pub alerts_info: usize,
+    pub alerts_warn: usize,
+    pub alerts_critical: usize,
+}
+
+/// Copy the current health gauges out of the monitor.
+pub fn health_snapshot() -> HealthSnapshot {
+    let m = lock();
+    let chains: Vec<ChainGauges> = m
+        .chains
+        .iter()
+        .map(|(&chain, c)| ChainGauges {
+            chain,
+            samples: c.samples,
+            non_finite: c.non_finite,
+            mean: c.welford.mean(),
+            sd: c.welford.sd(),
+            ess_per_sec: c.ess_per_sec,
+            q05: c.quantiles.quantile(0.05),
+            q50: c.quantiles.quantile(0.5),
+            q95: c.quantiles.quantile(0.95),
+        })
+        .collect();
+    let nodes: Vec<NodeGauges> = m
+        .nodes
+        .iter()
+        .map(|(&node, n)| NodeGauges {
+            node,
+            execs: n.execs,
+            stalls: n.stalls,
+            stall_ratio: n.stall_ratio(),
+            mean_staleness: if n.execs > 0 {
+                n.staleness_sum as f64 / n.execs as f64
+            } else {
+                f64::NAN
+            },
+            max_staleness: n.max_staleness,
+            consecutive_at_tau: n.consecutive_at_tau,
+            msgs_sent: n.msgs_sent,
+            msgs_dropped: n.msgs_dropped,
+        })
+        .collect();
+    let finite: Vec<f64> =
+        chains.iter().map(|c| c.ess_per_sec).filter(|e| e.is_finite()).collect();
+    HealthSnapshot {
+        context: m.context.clone(),
+        split_rhat: m.split_rhat(),
+        ess_per_sec: if finite.is_empty() { None } else { Some(finite.iter().sum()) },
+        alerts_info: m.engine.count_by_severity(Severity::Info),
+        alerts_warn: m.engine.count_by_severity(Severity::Warn),
+        alerts_critical: m.engine.count_by_severity(Severity::Critical),
+        chains,
+        nodes,
+    }
+}
+
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Machine-readable health summary (schema `psgld-health-summary/1`).
+/// The top-level `alerts_total` is what CI greps for.
+pub fn health_summary_json() -> Json {
+    let h = health_snapshot();
+    let chains: Vec<Json> = h
+        .chains
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("chain", Json::num(c.chain as f64)),
+                ("samples", Json::num(c.samples as f64)),
+                ("non_finite", Json::num(c.non_finite as f64)),
+                ("mean", jnum(c.mean)),
+                ("sd", jnum(c.sd)),
+                ("ess_per_sec", jnum(c.ess_per_sec)),
+                ("q05", jnum(c.q05)),
+                ("q50", jnum(c.q50)),
+                ("q95", jnum(c.q95)),
+            ])
+        })
+        .collect();
+    let nodes: Vec<Json> = h
+        .nodes
+        .iter()
+        .map(|n| {
+            Json::obj(vec![
+                ("node", Json::num(n.node as f64)),
+                ("execs", Json::num(n.execs as f64)),
+                ("stalls", Json::num(n.stalls as f64)),
+                ("stall_ratio", jnum(n.stall_ratio)),
+                ("mean_staleness", jnum(n.mean_staleness)),
+                ("max_staleness", Json::num(n.max_staleness as f64)),
+                ("consecutive_at_tau", Json::num(n.consecutive_at_tau as f64)),
+                ("msgs_sent", Json::num(n.msgs_sent as f64)),
+                ("msgs_dropped", Json::num(n.msgs_dropped as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str("psgld-health-summary/1".to_string())),
+        ("context", Json::Str(h.context.clone())),
+        (
+            "alerts_total",
+            Json::num((h.alerts_info + h.alerts_warn + h.alerts_critical) as f64),
+        ),
+        (
+            "alerts",
+            Json::obj(vec![
+                ("critical", Json::num(h.alerts_critical as f64)),
+                ("info", Json::num(h.alerts_info as f64)),
+                ("warn", Json::num(h.alerts_warn as f64)),
+            ]),
+        ),
+        (
+            "gauges",
+            Json::obj(vec![
+                ("chains", Json::num(h.chains.len() as f64)),
+                ("ess_per_sec", h.ess_per_sec.map_or(Json::Null, jnum)),
+                ("nodes", Json::num(h.nodes.len() as f64)),
+                ("split_rhat", h.split_rhat.map_or(Json::Null, jnum)),
+            ]),
+        ),
+        ("chains", Json::Arr(chains)),
+        ("nodes", Json::Arr(nodes)),
+    ])
+}
+
+/// Write every fired health event as one JSON line; an empty file
+/// means a clean run. Returns the number of events written.
+pub fn write_health_jsonl(path: &Path) -> Result<usize> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let evs = events();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for ev in &evs {
+        writeln!(f, "{}", ev.to_json().to_string_compact())?;
+    }
+    f.flush()?;
+    Ok(evs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_feed_is_a_noop() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_level_override(Some(ObsLevel::Off));
+        reset();
+        observe_sample(1, 0.1, f64::NAN);
+        observe_node_exec(0, 1, 3, 2, 0.5);
+        let h = health_snapshot();
+        assert!(h.chains.is_empty());
+        assert!(h.nodes.is_empty());
+        assert_eq!(alerts_total(), 0);
+        crate::obs::set_level_override(None);
+    }
+
+    #[test]
+    fn chain_attribution_and_summary() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_level_override(Some(ObsLevel::Counters));
+        reset();
+        for t in 1..=50u64 {
+            with_chain(0, || observe_sample(t, t as f64 * 0.1, (t % 7) as f64));
+            with_chain(1, || observe_sample(t, t as f64 * 0.1, (t % 7) as f64 + 0.1));
+        }
+        let h = health_snapshot();
+        assert_eq!(h.chains.len(), 2);
+        assert_eq!(h.chains[0].samples, 50);
+        assert!(h.split_rhat.is_some(), "two chains with data give a split-Rhat");
+        let summary = health_summary_json();
+        assert_eq!(summary.field("alerts_total").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(
+            summary.field("gauges").unwrap().field("chains").unwrap().as_u64().unwrap(),
+            2
+        );
+        reset();
+        crate::obs::set_level_override(None);
+    }
+
+    #[test]
+    fn nan_sample_fires_critical_alert_and_jsonl_round_trips() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_level_override(Some(ObsLevel::Counters));
+        reset();
+        observe_sample(1, 0.0, 1.0);
+        observe_sample(2, 0.1, f64::INFINITY);
+        let evs = events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].rule, "non_finite_value");
+        assert_eq!(evs[0].severity, Severity::Critical);
+        let path = std::env::temp_dir().join("psgld_monitor_health.jsonl");
+        let n = write_health_jsonl(&path).unwrap();
+        assert_eq!(n, 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(parsed.field("rule").unwrap().as_str().unwrap(), "non_finite_value");
+        let _ = std::fs::remove_file(&path);
+        reset();
+        crate::obs::set_level_override(None);
+    }
+
+    #[test]
+    fn node_feed_tracks_stall_ratio_and_staleness() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_level_override(Some(ObsLevel::Counters));
+        reset();
+        set_rules(vec![AlertRule::StalenessPinned { k: 4, cooldown: 1000 }]);
+        for t in 1..=10u64 {
+            observe_node_exec(2, t, 3, 3, 0.5);
+            observe_node_stall(2, 0.25);
+        }
+        let h = health_snapshot();
+        assert_eq!(h.nodes.len(), 1);
+        let n = &h.nodes[0];
+        assert_eq!(n.execs, 10);
+        assert!((n.stall_ratio - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(n.max_staleness, 3);
+        assert_eq!(n.consecutive_at_tau, 10);
+        let evs = events();
+        assert_eq!(evs.len(), 1, "pinned-staleness alert fires once under cooldown");
+        assert_eq!(evs[0].rule, "staleness_pinned");
+        reset();
+        crate::obs::set_level_override(None);
+    }
+}

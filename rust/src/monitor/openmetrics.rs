@@ -1,0 +1,303 @@
+//! OpenMetrics text exposition of the obs-metrics snapshot merged with
+//! the monitor's health gauges, plus a minimal lint used by tests and
+//! CI to keep the output scrape-compatible.
+//!
+//! Format reference: OpenMetrics 1.0 text format. We emit only the
+//! subset we need — `# TYPE` metadata, counter samples with the
+//! `_total` suffix, labelled gauges, and the mandatory `# EOF`
+//! terminator — and the lint checks exactly that subset.
+
+use std::fmt::Write as _;
+
+use crate::obs::{self, Counter, Phase};
+use crate::{Error, Result};
+
+/// Render the merged obs + health snapshot as OpenMetrics text.
+///
+/// Non-finite gauge values are omitted rather than serialised: a
+/// missing sample is meaningful to a scraper, a `NaN` is noise.
+pub fn render_openmetrics() -> String {
+    let snap = obs::snapshot();
+    let health = super::health_snapshot();
+    let mut out = String::with_capacity(4096);
+
+    // --- obs counters ---
+    for c in Counter::ALL {
+        let _ = writeln!(out, "# TYPE pallas_{} counter", c.name());
+        let _ = writeln!(out, "pallas_{}_total {}", c.name(), snap.counter(c));
+    }
+
+    // --- per-phase wall time and span counts ---
+    let _ = writeln!(out, "# TYPE pallas_phase_seconds counter");
+    for p in Phase::ALL {
+        let _ = writeln!(
+            out,
+            "pallas_phase_seconds_total{{phase=\"{}\"}} {}",
+            p.name(),
+            snap.phase_seconds(p)
+        );
+    }
+    let _ = writeln!(out, "# TYPE pallas_phase_spans counter");
+    for p in Phase::ALL {
+        let _ = writeln!(
+            out,
+            "pallas_phase_spans_total{{phase=\"{}\"}} {}",
+            p.name(),
+            snap.phase_count[p.idx()]
+        );
+    }
+    let _ = writeln!(out, "# TYPE pallas_phase_duration_ns gauge");
+    for p in Phase::ALL {
+        if snap.phase_count[p.idx()] == 0 {
+            continue;
+        }
+        for q in [0.5, 0.99] {
+            let v = snap.quantile_ns(p, q);
+            if v.is_finite() {
+                let _ = writeln!(
+                    out,
+                    "pallas_phase_duration_ns{{phase=\"{}\",quantile=\"{q}\"}} {v}",
+                    p.name()
+                );
+            }
+        }
+    }
+
+    // --- monitor gauges ---
+    let _ = writeln!(out, "# TYPE pallas_health_alerts counter");
+    for (sev, n) in [
+        ("info", health.alerts_info),
+        ("warn", health.alerts_warn),
+        ("critical", health.alerts_critical),
+    ] {
+        let _ = writeln!(out, "pallas_health_alerts_total{{severity=\"{sev}\"}} {n}");
+    }
+    let _ = writeln!(out, "# TYPE pallas_health_chains gauge");
+    let _ = writeln!(out, "pallas_health_chains {}", health.chains.len());
+    if let Some(rhat) = health.split_rhat {
+        if rhat.is_finite() {
+            let _ = writeln!(out, "# TYPE pallas_health_split_rhat gauge");
+            let _ = writeln!(out, "pallas_health_split_rhat {rhat}");
+        }
+    }
+    let _ = writeln!(out, "# TYPE pallas_health_samples counter");
+    for c in &health.chains {
+        let _ = writeln!(
+            out,
+            "pallas_health_samples_total{{chain=\"{}\"}} {}",
+            c.chain, c.samples
+        );
+    }
+    let _ = writeln!(out, "# TYPE pallas_health_ess_per_sec gauge");
+    for c in &health.chains {
+        if c.ess_per_sec.is_finite() {
+            let _ = writeln!(
+                out,
+                "pallas_health_ess_per_sec{{chain=\"{}\"}} {}",
+                c.chain, c.ess_per_sec
+            );
+        }
+    }
+    let _ = writeln!(out, "# TYPE pallas_health_value gauge");
+    for c in &health.chains {
+        for (stat, v) in
+            [("mean", c.mean), ("q05", c.q05), ("q50", c.q50), ("q95", c.q95)]
+        {
+            if v.is_finite() {
+                let _ = writeln!(
+                    out,
+                    "pallas_health_value{{chain=\"{}\",stat=\"{stat}\"}} {v}",
+                    c.chain
+                );
+            }
+        }
+    }
+    let _ = writeln!(out, "# TYPE pallas_health_node_stall_ratio gauge");
+    for n in &health.nodes {
+        if n.stall_ratio.is_finite() {
+            let _ = writeln!(
+                out,
+                "pallas_health_node_stall_ratio{{node=\"{}\"}} {}",
+                n.node, n.stall_ratio
+            );
+        }
+    }
+    let _ = writeln!(out, "# TYPE pallas_health_node_staleness_max gauge");
+    for n in &health.nodes {
+        let _ = writeln!(
+            out,
+            "pallas_health_node_staleness_max{{node=\"{}\"}} {}",
+            n.node, n.max_staleness
+        );
+    }
+
+    out.push_str("# EOF\n");
+    out
+}
+
+fn is_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Minimal OpenMetrics lint: every sample's family must be declared by
+/// a preceding `# TYPE` line (directly or via the `_total` suffix),
+/// names must match the metric-name charset, values must parse as
+/// floats, and the exposition must end with `# EOF`.
+pub fn lint_openmetrics(text: &str) -> Result<()> {
+    let mut families: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    let mut samples = 0usize;
+    let mut saw_eof = false;
+    for (i, line) in text.lines().enumerate() {
+        let fail = |msg: String| Err(Error::Config(format!("openmetrics line {}: {msg}", i + 1)));
+        if saw_eof {
+            return fail("content after # EOF".to_string());
+        }
+        if line.is_empty() {
+            return fail("empty line".to_string());
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if rest == "EOF" {
+                saw_eof = true;
+                continue;
+            }
+            let mut parts = rest.splitn(3, ' ');
+            let keyword = parts.next().unwrap_or("");
+            match keyword {
+                "TYPE" => {
+                    let Some(name) = parts.next() else {
+                        return fail("# TYPE without a family name".to_string());
+                    };
+                    let Some(kind) = parts.next() else {
+                        return fail("# TYPE without a type".to_string());
+                    };
+                    if !is_metric_name(name) {
+                        return fail(format!("bad family name {name:?}"));
+                    }
+                    if !matches!(
+                        kind,
+                        "counter" | "gauge" | "histogram" | "summary" | "info" | "unknown"
+                    ) {
+                        return fail(format!("unknown metric type {kind:?}"));
+                    }
+                    families.insert(name.to_string());
+                }
+                "HELP" | "UNIT" => {
+                    let Some(name) = parts.next() else {
+                        return fail(format!("# {keyword} without a family name"));
+                    };
+                    if !is_metric_name(name) {
+                        return fail(format!("bad family name {name:?}"));
+                    }
+                }
+                other => return fail(format!("unknown comment keyword {other:?}")),
+            }
+            continue;
+        }
+        // Sample line: name[{labels}] value
+        let Some(name_end) = line.find(|c: char| c == '{' || c == ' ') else {
+            return fail("sample without a value".to_string());
+        };
+        let name = &line[..name_end];
+        if !is_metric_name(name) {
+            return fail(format!("bad metric name {name:?}"));
+        }
+        let base = name.strip_suffix("_total").unwrap_or(name);
+        if !families.contains(name) && !families.contains(base) {
+            return fail(format!("sample {name:?} precedes its # TYPE declaration"));
+        }
+        let after = &line[name_end..];
+        let value_part = if let Some(stripped) = after.strip_prefix('{') {
+            let Some(close) = stripped.find('}') else {
+                return fail("unterminated label set".to_string());
+            };
+            if stripped[..close].matches('"').count() % 2 != 0 {
+                return fail("unbalanced quotes in label set".to_string());
+            }
+            &stripped[close + 1..]
+        } else {
+            after
+        };
+        let Some(value) = value_part.split_whitespace().next() else {
+            return fail("sample without a value".to_string());
+        };
+        if value.parse::<f64>().is_err() {
+            return fail(format!("sample value {value:?} is not a float"));
+        }
+        samples += 1;
+    }
+    if !saw_eof {
+        return Err(Error::Config(
+            "openmetrics exposition missing the # EOF terminator".to_string(),
+        ));
+    }
+    if samples == 0 {
+        return Err(Error::Config(
+            "openmetrics exposition contains no samples".to_string(),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_accepts_minimal_exposition() {
+        let text = "# TYPE pallas_steps counter\n\
+                    pallas_steps_total 42\n\
+                    # TYPE x gauge\n\
+                    x{chain=\"0\",stat=\"mean\"} -1.25e3\n\
+                    # EOF\n";
+        lint_openmetrics(text).unwrap();
+    }
+
+    #[test]
+    fn lint_rejects_missing_eof() {
+        let text = "# TYPE a counter\na_total 1\n";
+        assert!(lint_openmetrics(text).is_err());
+    }
+
+    #[test]
+    fn lint_rejects_undeclared_sample() {
+        let text = "# TYPE a counter\nb_total 1\n# EOF\n";
+        assert!(lint_openmetrics(text).is_err());
+    }
+
+    #[test]
+    fn lint_rejects_bad_value_and_name() {
+        assert!(lint_openmetrics("# TYPE a gauge\na forty\n# EOF\n").is_err());
+        assert!(lint_openmetrics("# TYPE 9bad gauge\n9bad 1\n# EOF\n").is_err());
+        assert!(lint_openmetrics("# TYPE a gauge\na 1\nx\n# EOF\n").is_err());
+        assert!(lint_openmetrics("# TYPE a gauge\n# EOF\n").is_err(), "no samples");
+        assert!(lint_openmetrics("# TYPE a gauge\na 1\n# EOF\nz 1\n").is_err());
+    }
+
+    #[test]
+    fn render_lints_clean() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_level_override(Some(crate::obs::ObsLevel::Counters));
+        crate::obs::reset();
+        crate::monitor::reset();
+        crate::obs::counter_add(Counter::Steps, 3);
+        crate::monitor::with_chain(0, || {
+            for t in 1..=20u64 {
+                crate::monitor::observe_sample(t, t as f64 * 0.01, (t % 5) as f64);
+            }
+        });
+        let text = render_openmetrics();
+        lint_openmetrics(&text).unwrap();
+        assert!(text.contains("pallas_steps_total 3"));
+        assert!(text.contains("pallas_health_samples_total{chain=\"0\"} 20"));
+        assert!(text.ends_with("# EOF\n"));
+        crate::monitor::reset();
+        crate::obs::reset();
+        crate::obs::set_level_override(None);
+    }
+}

@@ -1,0 +1,292 @@
+//! Bench / health baseline comparison behind the `check-regression`
+//! CLI subcommand.
+//!
+//! Baselines are the committed `baselines/BENCH_*.json` (rows from the
+//! bench harnesses, keyed by `name` with an `ops_per_s` metric, or by
+//! `tau`/`crash_rate` with `iters_per_vsec` for the fault sweep) plus
+//! optional `health_summary.json` gauges. A metric regresses when the
+//! current value drops below `baseline * (1 - tol_frac)`; higher is
+//! always better for every compared metric.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// One metric that fell below its tolerance band.
+#[derive(Clone, Debug)]
+pub struct RegressionFinding {
+    pub file: String,
+    pub key: String,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl RegressionFinding {
+    /// current / baseline (both finite and positive by construction).
+    pub fn ratio(&self) -> f64 {
+        self.current / self.baseline
+    }
+}
+
+/// Outcome of a baseline comparison.
+#[derive(Clone, Debug, Default)]
+pub struct RegressionReport {
+    /// Metrics present in both baseline and current.
+    pub compared: usize,
+    pub regressions: Vec<RegressionFinding>,
+    /// Baseline entries with no counterpart in the current run.
+    pub skipped: Vec<String>,
+}
+
+impl RegressionReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline` (two files, or two directories
+/// paired by file name) with relative tolerance `tol_frac` in [0, 1).
+pub fn check_regression(
+    baseline: &Path,
+    current: &Path,
+    tol_frac: f64,
+) -> Result<RegressionReport> {
+    if !(0.0..1.0).contains(&tol_frac) {
+        return Err(Error::Config(format!(
+            "tolerance fraction {tol_frac} outside [0, 1)"
+        )));
+    }
+    let mut report = RegressionReport::default();
+    if baseline.is_dir() {
+        if !current.is_dir() {
+            return Err(Error::Config(format!(
+                "baseline {} is a directory but current {} is not",
+                baseline.display(),
+                current.display()
+            )));
+        }
+        let mut names: Vec<String> = std::fs::read_dir(baseline)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| comparable_file(n))
+            .collect();
+        names.sort();
+        if names.is_empty() {
+            return Err(Error::Config(format!(
+                "baseline directory {} has no BENCH_*.json or health/obs summaries",
+                baseline.display()
+            )));
+        }
+        for name in names {
+            let cur = current.join(&name);
+            if cur.is_file() {
+                compare_file(&mut report, &name, &baseline.join(&name), &cur, tol_frac)?;
+            } else {
+                report.skipped.push(format!("{name}: missing from current run"));
+            }
+        }
+    } else {
+        let name = baseline
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("baseline")
+            .to_string();
+        compare_file(&mut report, &name, baseline, current, tol_frac)?;
+    }
+    Ok(report)
+}
+
+fn comparable_file(name: &str) -> bool {
+    (name.starts_with("BENCH_") && name.ends_with(".json"))
+        || name == "health_summary.json"
+        || name == "obs_summary.json"
+}
+
+fn parse_file(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+    Json::parse(&text).map_err(|e| Error::Config(format!("{}: {e}", path.display())))
+}
+
+/// Extract (key, value) for one bench row; `None` for rows without a
+/// recognised throughput metric.
+fn row_entry(row: &Json) -> Option<(String, f64)> {
+    if let Some(name) = row.field_opt("name").and_then(|n| n.as_str().ok()) {
+        let v = row.field_opt("ops_per_s")?.as_f64().ok()?;
+        return Some((format!("{name}:ops_per_s"), v));
+    }
+    let tau = row.field_opt("tau")?.as_f64().ok()?;
+    let rate = row.field_opt("crash_rate")?.as_f64().ok()?;
+    let v = row.field_opt("iters_per_vsec")?.as_f64().ok()?;
+    Some((format!("tau={tau},crash_rate={rate}:iters_per_vsec"), v))
+}
+
+/// All comparable metrics in one parsed file, keyed for pairing.
+fn metrics_of(doc: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    match doc {
+        Json::Arr(rows) => {
+            for row in rows {
+                if let Some((k, v)) = row_entry(row) {
+                    out.insert(k, v);
+                }
+            }
+        }
+        Json::Obj(_) => {
+            // health_summary.json: ESS/sec gauge, when present.
+            if let Some(v) = doc
+                .field_opt("gauges")
+                .and_then(|g| g.field_opt("ess_per_sec"))
+                .and_then(|v| v.as_f64().ok())
+            {
+                out.insert("gauges.ess_per_sec".to_string(), v);
+            }
+        }
+        _ => {}
+    }
+    out
+}
+
+fn compare_file(
+    report: &mut RegressionReport,
+    name: &str,
+    baseline: &Path,
+    current: &Path,
+    tol_frac: f64,
+) -> Result<()> {
+    let base = metrics_of(&parse_file(baseline)?);
+    let cur = metrics_of(&parse_file(current)?);
+    if base.is_empty() {
+        report.skipped.push(format!("{name}: no comparable metrics in baseline"));
+        return Ok(());
+    }
+    for (key, &bv) in &base {
+        match cur.get(key) {
+            Some(&cv) if bv.is_finite() && cv.is_finite() && bv > 0.0 => {
+                report.compared += 1;
+                if cv < bv * (1.0 - tol_frac) {
+                    report.regressions.push(RegressionFinding {
+                        file: name.to_string(),
+                        key: key.clone(),
+                        baseline: bv,
+                        current: cv,
+                    });
+                }
+            }
+            Some(_) => {
+                report.skipped.push(format!("{name}:{key}: non-finite value"));
+            }
+            None => {
+                report.skipped.push(format!("{name}:{key}: missing from current run"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write(dir: &Path, name: &str, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join(name), text).unwrap();
+    }
+
+    const BENCH: &str = r#"[
+        {"name":"dense_grads/K=8","ns_per_iter":10.0,"ops_per_s":1000.0,"unit":"entries","threads":1},
+        {"name":"sgld_apply/16384","ns_per_iter":5.0,"ops_per_s":2000.0,"unit":"entries","threads":1}
+    ]"#;
+
+    const FAULT: &str = r#"[
+        {"tau":0,"crash_rate":0.0,"iters_per_vsec":50.0,"holdout_loglik":-1.0},
+        {"tau":4,"crash_rate":0.02,"iters_per_vsec":40.0,"holdout_loglik":-1.0}
+    ]"#;
+
+    #[test]
+    fn identical_dirs_pass() {
+        let base = std::env::temp_dir().join("psgld_reg_base_a");
+        let cur = std::env::temp_dir().join("psgld_reg_cur_a");
+        for d in [&base, &cur] {
+            write(d, "BENCH_kernels.json", BENCH);
+            write(d, "BENCH_fault.json", FAULT);
+        }
+        let rep = check_regression(&base, &cur, 0.2).unwrap();
+        assert!(rep.passed(), "regressions: {:?}", rep.regressions);
+        assert_eq!(rep.compared, 4);
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&cur);
+    }
+
+    #[test]
+    fn degraded_throughput_fails() {
+        let base = std::env::temp_dir().join("psgld_reg_base_b");
+        let cur = std::env::temp_dir().join("psgld_reg_cur_b");
+        write(&base, "BENCH_kernels.json", BENCH);
+        let degraded = BENCH.replace("1000.0", "100.0");
+        write(&cur, "BENCH_kernels.json", &degraded);
+        let rep = check_regression(&base, &cur, 0.5).unwrap();
+        assert!(!rep.passed());
+        assert_eq!(rep.regressions.len(), 1);
+        let f = &rep.regressions[0];
+        assert_eq!(f.key, "dense_grads/K=8:ops_per_s");
+        assert!((f.ratio() - 0.1).abs() < 1e-12);
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&cur);
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = std::env::temp_dir().join("psgld_reg_base_c");
+        let cur = std::env::temp_dir().join("psgld_reg_cur_c");
+        write(&base, "BENCH_fault.json", FAULT);
+        write(&cur, "BENCH_fault.json", &FAULT.replace("40.0", "35.0"));
+        let rep = check_regression(&base, &cur, 0.2).unwrap();
+        assert!(rep.passed(), "12.5% drop within 20% band: {:?}", rep.regressions);
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&cur);
+    }
+
+    #[test]
+    fn health_gauges_compare() {
+        let base = std::env::temp_dir().join("psgld_reg_base_d");
+        let cur = std::env::temp_dir().join("psgld_reg_cur_d");
+        write(
+            &base,
+            "health_summary.json",
+            r#"{"alerts_total":0,"gauges":{"ess_per_sec":10.0}}"#,
+        );
+        write(
+            &cur,
+            "health_summary.json",
+            r#"{"alerts_total":0,"gauges":{"ess_per_sec":2.0}}"#,
+        );
+        let rep = check_regression(&base, &cur, 0.5).unwrap();
+        assert_eq!(rep.regressions.len(), 1);
+        assert_eq!(rep.regressions[0].key, "gauges.ess_per_sec");
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&cur);
+    }
+
+    #[test]
+    fn missing_current_file_is_skipped_not_failed() {
+        let base = std::env::temp_dir().join("psgld_reg_base_e");
+        let cur = std::env::temp_dir().join("psgld_reg_cur_e");
+        write(&base, "BENCH_kernels.json", BENCH);
+        write(&base, "BENCH_fig5.json", BENCH);
+        write(&cur, "BENCH_kernels.json", BENCH);
+        let rep = check_regression(&base, &cur, 0.2).unwrap();
+        assert!(rep.passed());
+        assert!(rep.skipped.iter().any(|s| s.contains("BENCH_fig5.json")));
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&cur);
+    }
+
+    #[test]
+    fn bad_tolerance_rejected() {
+        let p = Path::new("/nonexistent");
+        assert!(check_regression(p, p, 1.5).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny blocking OpenMetrics scrape endpoint (std `TcpListener`, no
+//! dependencies, one request per connection).
+//!
+//! The server renders [`super::openmetrics::render_openmetrics`] fresh
+//! on every request, so a scraper always sees the current counters and
+//! health gauges. It runs on one named thread and is torn down on
+//! [`Drop`] by a self-connect that unblocks `accept`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::{Error, Result};
+
+/// A running scrape endpoint; dropping it stops the serving thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, or port `0` for ephemeral)
+    /// and serve the exposition until dropped.
+    pub fn spawn(addr: &str) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Config(format!("PALLAS_METRICS_ADDR {addr:?}: {e}")))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_thread = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("pallas-metrics".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop_thread.load(Ordering::Acquire) {
+                        break;
+                    }
+                    if let Ok(stream) = stream {
+                        // Scrape failures are the scraper's problem;
+                        // never let them take the sampler down.
+                        let _ = serve_one(stream);
+                    }
+                }
+            })?;
+        crate::log_info!("metrics endpoint listening on http://{addr}/metrics");
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // accept() blocks; a throwaway connection wakes it so the
+        // thread observes the stop flag and exits.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_millis(200));
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Answer one HTTP request with the current exposition and close.
+fn serve_one(stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut reader = BufReader::new(stream);
+    // Consume the request head (request line + headers) up to the
+    // blank line; the body (if any) is ignored.
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 || line == "\r\n" || line == "\n" {
+            break;
+        }
+    }
+    let body = super::openmetrics::render_openmetrics();
+    let mut stream = reader.into_inner();
+    let head = format!(
+        "HTTP/1.1 200 OK\r\n\
+         Content-Type: application/openmetrics-text; version=1.0.0; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}

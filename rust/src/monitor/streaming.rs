@@ -1,0 +1,354 @@
+//! Streaming statistics with O(1) (or bounded) memory per statistic.
+//!
+//! Everything here is a plain accumulator: no global state, no locking,
+//! no interaction with the chain RNG. The windowed estimators reuse the
+//! batch implementations in [`crate::metrics::diagnostics`] over their
+//! bounded window so the online numbers agree with the post-hoc
+//! diagnostics bit-for-bit whenever the window covers the full stream
+//! (pinned by `tests/monitor.rs`).
+
+use std::cmp::Ordering;
+
+use crate::metrics::diagnostics::{gelman_rubin, integrated_autocorr_time};
+use crate::rng::Rng;
+
+/// Welford's online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one observation into the running moments.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean (NaN before the first observation).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Unbiased sample variance (NaN until two observations).
+    pub fn var_sample(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Population variance (NaN before the first observation).
+    pub fn var_pop(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample standard deviation (NaN until two observations).
+    pub fn sd(&self) -> f64 {
+        self.var_sample().sqrt()
+    }
+}
+
+/// Online across-chain potential scale reduction factor.
+///
+/// Keeps one [`Welford`] per chain; `rhat()` evaluates the classic
+/// Gelman–Rubin statistic from the per-chain moments alone, which is
+/// exactly the batch formula when every chain has seen the same number
+/// of samples (the batch code trims to the minimum length instead).
+#[derive(Clone, Debug, Default)]
+pub struct OnlineRhat {
+    chains: Vec<Welford>,
+}
+
+impl OnlineRhat {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one observation from `chain` (chains are created on first
+    /// use, so indices may arrive in any order).
+    pub fn push(&mut self, chain: usize, x: f64) {
+        if chain >= self.chains.len() {
+            self.chains.resize_with(chain + 1, Welford::new);
+        }
+        self.chains[chain].push(x);
+    }
+
+    pub fn n_chains(&self) -> usize {
+        self.chains.len()
+    }
+
+    /// R̂ from the running moments, or `None` until there are at least
+    /// two chains with at least four samples each and equal counts
+    /// (unequal counts would silently diverge from the batch estimate).
+    pub fn rhat(&self) -> Option<f64> {
+        let m = self.chains.len();
+        if m < 2 {
+            return None;
+        }
+        let n = self.chains[0].count();
+        if n < 4 || self.chains.iter().any(|c| c.count() != n) {
+            return None;
+        }
+        let nf = n as f64;
+        let grand = self.chains.iter().map(|c| c.mean()).sum::<f64>() / m as f64;
+        let b = nf / (m - 1) as f64
+            * self.chains.iter().map(|c| (c.mean() - grand).powi(2)).sum::<f64>();
+        let w = self.chains.iter().map(|c| c.var_sample()).sum::<f64>() / m as f64;
+        if w == 0.0 {
+            return Some(1.0);
+        }
+        let var_plus = (nf - 1.0) / nf * w + b / nf;
+        Some((var_plus / w).sqrt())
+    }
+}
+
+/// Fixed-capacity ring buffer over the most recent observations.
+#[derive(Clone, Debug)]
+pub struct RingWindow {
+    buf: Vec<f64>,
+    cap: usize,
+    /// Index of the oldest element once the buffer is full.
+    head: usize,
+}
+
+impl RingWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring window needs capacity >= 1");
+        RingWindow { buf: Vec::new(), cap, head: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Oldest element still in the window.
+    pub fn front(&self) -> Option<f64> {
+        self.buf.get(self.head).copied()
+    }
+
+    /// Window contents in arrival order (oldest first).
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+/// Integrated autocorrelation time of the window contents — the batch
+/// Geyer initial-positive-sequence estimator applied to the (ordered)
+/// window, so it matches `integrated_autocorr_time` exactly while the
+/// window still covers the whole stream.
+pub fn windowed_iat(w: &RingWindow) -> f64 {
+    integrated_autocorr_time(&w.to_vec())
+}
+
+/// Split-R̂ of a single stream: first half vs second half of the
+/// window, through the batch [`gelman_rubin`]. `None` until each half
+/// has at least four samples (the batch code's minimum).
+pub fn split_rhat_window(w: &RingWindow) -> Option<f64> {
+    let v = w.to_vec();
+    let half = v.len() / 2;
+    if half < 4 {
+        return None;
+    }
+    let first = v[..half].to_vec();
+    let second = v[v.len() - half..].to_vec();
+    Some(gelman_rubin(&[first, second]))
+}
+
+/// Reservoir-sampled quantile estimator (Vitter's Algorithm R) with a
+/// fixed-size reservoir and its own derived RNG stream — it never
+/// touches the chain RNG, so sampling output is unaffected.
+#[derive(Clone, Debug)]
+pub struct ReservoirQuantiles {
+    res: Vec<f64>,
+    cap: usize,
+    seen: u64,
+    rng: Rng,
+}
+
+impl ReservoirQuantiles {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        assert!(cap > 0, "reservoir needs capacity >= 1");
+        ReservoirQuantiles {
+            res: Vec::new(),
+            cap,
+            seen: 0,
+            // "moni" tag keeps this stream disjoint from sampler streams
+            rng: Rng::derive(seed, &[0x6d6f_6e69]),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.res.len() < self.cap {
+            self.res.push(x);
+        } else {
+            let j = self.rng.next_below(self.seen);
+            if (j as usize) < self.cap {
+                self.res[j as usize] = x;
+            }
+        }
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Empirical `q`-quantile of the reservoir (NaN while empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.res.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.res.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));
+        let pos = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[pos.min(sorted.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 19) as f64 * 0.5 - 3.0).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var_sample() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 100);
+    }
+
+    #[test]
+    fn welford_edge_counts() {
+        let mut w = Welford::new();
+        assert!(w.mean().is_nan());
+        w.push(2.0);
+        assert_eq!(w.mean(), 2.0);
+        assert!(w.var_sample().is_nan());
+        assert_eq!(w.var_pop(), 0.0);
+    }
+
+    #[test]
+    fn online_rhat_matches_batch() {
+        let mut rng = Rng::seed_from(7);
+        let chains: Vec<Vec<f64>> = (0..3)
+            .map(|c| (0..200).map(|_| rng.next_f64() + c as f64 * 0.01).collect())
+            .collect();
+        let mut online = OnlineRhat::new();
+        for (c, chain) in chains.iter().enumerate() {
+            for &x in chain {
+                online.push(c, x);
+            }
+        }
+        let batch = gelman_rubin(&chains);
+        let got = online.rhat().expect("rhat available");
+        assert!((got - batch).abs() < 1e-12, "online {got} vs batch {batch}");
+    }
+
+    #[test]
+    fn online_rhat_requires_equal_counts() {
+        let mut online = OnlineRhat::new();
+        for i in 0..10 {
+            online.push(0, i as f64);
+        }
+        assert_eq!(online.rhat(), None, "single chain");
+        for i in 0..9 {
+            online.push(1, i as f64);
+        }
+        assert_eq!(online.rhat(), None, "unequal counts");
+        online.push(1, 9.0);
+        assert!(online.rhat().is_some());
+    }
+
+    #[test]
+    fn ring_window_wraps_in_order() {
+        let mut w = RingWindow::new(4);
+        for i in 0..6 {
+            w.push(i as f64);
+        }
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.to_vec(), vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w.front(), Some(2.0));
+    }
+
+    #[test]
+    fn windowed_iat_matches_batch_when_window_covers_stream() {
+        let mut rng = Rng::seed_from(11);
+        let xs: Vec<f64> = (0..300).map(|_| rng.next_f64()).collect();
+        let mut w = RingWindow::new(512);
+        for &x in &xs {
+            w.push(x);
+        }
+        let batch = integrated_autocorr_time(&xs);
+        assert_eq!(windowed_iat(&w), batch);
+    }
+
+    #[test]
+    fn split_rhat_window_is_batch_on_halves() {
+        let mut rng = Rng::seed_from(13);
+        let xs: Vec<f64> = (0..100).map(|_| rng.next_f64()).collect();
+        let mut w = RingWindow::new(128);
+        for &x in &xs {
+            w.push(x);
+        }
+        let batch = gelman_rubin(&[xs[..50].to_vec(), xs[50..].to_vec()]);
+        let got = split_rhat_window(&w).unwrap();
+        assert!((got - batch).abs() < 1e-15);
+    }
+
+    #[test]
+    fn reservoir_median_is_sane() {
+        let mut r = ReservoirQuantiles::new(64, 99);
+        for i in 0..10_000 {
+            r.push((i % 1000) as f64);
+        }
+        let med = r.quantile(0.5);
+        assert!((200.0..800.0).contains(&med), "median {med} far from 500");
+        assert!(r.quantile(0.0) <= r.quantile(1.0));
+        assert_eq!(r.seen(), 10_000);
+    }
+}

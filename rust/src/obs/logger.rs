@@ -109,6 +109,13 @@ pub fn log(lvl: LogLevel, args: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Emit a structured machine-readable record (e.g. a monitor health
+/// event) as one compact JSON line through the leveled logger, so it
+/// obeys `PALLAS_LOG` and the suppression counter like any other line.
+pub fn log_event(lvl: LogLevel, event: &crate::util::Json) {
+    log(lvl, format_args!("{}", event.to_string_compact()));
+}
+
 /// Log at error level (stderr). Accepts `format!` syntax.
 #[macro_export]
 macro_rules! log_error {

@@ -36,7 +36,7 @@ pub mod metrics;
 pub mod span;
 
 pub use export::{validate_trace, write_chrome_trace, write_summary, VtEvent};
-pub use logger::{log_enabled, set_log_override, LogLevel};
+pub use logger::{log_enabled, log_event, set_log_override, LogLevel};
 pub use metrics::{counter_add, reset, snapshot, Counter, MetricsSnapshot};
 pub use span::{clear_events, drain_events, Span, TraceEvent};
 

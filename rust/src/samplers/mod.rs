@@ -164,7 +164,9 @@ pub fn run_sampler<S: Sampler + ?Sized>(
     };
 
     // initial monitor point (iteration 0)
-    trace.push(0, 0.0, monitored(sampler.state()));
+    let v0 = monitored(sampler.state());
+    trace.push(0, 0.0, v0);
+    crate::monitor::observe_sample(0, 0.0, v0);
 
     for t in 1..=run.t_total {
         let tick = Instant::now();
@@ -172,7 +174,9 @@ pub fn run_sampler<S: Sampler + ?Sized>(
         sampling_seconds += tick.elapsed().as_secs_f64();
 
         if t % run.monitor_every == 0 || t == run.t_total {
-            trace.push(t, sampling_seconds, monitored(sampler.state()));
+            let v = monitored(sampler.state());
+            trace.push(t, sampling_seconds, v);
+            crate::monitor::observe_sample(t, sampling_seconds, v);
         }
         if t > run.burn_in && (t - run.burn_in) % run.thin == 0 {
             posterior.add(sampler.state());

@@ -48,8 +48,12 @@ where
     let idxs: Vec<usize> = (0..n_chains).collect();
     let mut pool = WorkerPool::new(threads.max(1).min(n_chains.max(1)));
     let chains = pool.map(idxs, |_, c| {
-        let mut sampler = make_chain(c);
-        run_sampler(&mut sampler, run, |s| monitor(s))
+        // Attribute this chain's monitor stream to its own index so the
+        // health monitor can compute an across-chain split-Rhat.
+        crate::monitor::with_chain(c, || {
+            let mut sampler = make_chain(c);
+            run_sampler(&mut sampler, run, |s| monitor(s))
+        })
     });
     let post: Vec<Vec<f64>> = chains
         .iter()

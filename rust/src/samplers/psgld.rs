@@ -192,6 +192,7 @@ impl Psgld {
     /// Convenience: run with the configured `RunConfig` and the default
     /// log-likelihood monitor; returns the full result.
     pub fn run(&mut self, run: &RunConfig) -> RunResult {
+        crate::monitor::set_context(self.name());
         let model = self.model.clone();
         let sparse = self.sparse_v.clone();
         match sparse {

@@ -1,0 +1,280 @@
+//! Integration contract for the sampler-health monitor (ISSUE 10):
+//!
+//! * the streaming estimators must agree with the batch diagnostics
+//!   they shadow (`gelman_rubin`, `integrated_autocorr_time`) to 1e-9;
+//! * a healthy async run must stay quiet — no non-finite, staleness or
+//!   message-loss alerts from the default rule set;
+//! * a fault-injected async run must raise at least one staleness /
+//!   stall alert, and the health JSONL must round-trip through the
+//!   crate's JSON parser;
+//! * the OpenMetrics exposition must pass the lint, both rendered
+//!   directly and scraped over HTTP from the metrics endpoint;
+//! * the regression gate must accept an unchanged baseline and reject
+//!   a degraded one.
+//!
+//! All tests share the process-global obs level and monitor state, so
+//! they serialise on a local mutex and reset both registries on entry.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use psgld::cluster::{
+    psgld_distributed_async, ComputeModel, FaultPlan, NetworkModel, StragglerRule, TieBreak,
+};
+use psgld::config::{AsyncClusterConfig, RunConfig, StepSchedule};
+use psgld::data::movielens;
+use psgld::metrics::diagnostics::integrated_autocorr_time;
+use psgld::metrics::gelman_rubin;
+use psgld::model::NmfModel;
+use psgld::monitor::{
+    self, check_regression, lint_openmetrics, render_openmetrics, windowed_iat, AlertRule,
+    MetricsServer, OnlineRhat, RingWindow,
+};
+use psgld::obs::{self, ObsLevel};
+use psgld::rng::{Dist, Rng};
+use psgld::util::Json;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Reset obs + monitor and pin the level so the monitor is live.
+fn monitor_on() {
+    obs::set_level_override(Some(ObsLevel::Counters));
+    obs::reset();
+    monitor::reset();
+}
+
+fn monitor_off() {
+    monitor::reset();
+    obs::reset();
+    obs::set_level_override(None);
+}
+
+/// AR(1) chains — autocorrelated like a real sampler trace, so the
+/// IAT is well above 1 and the R̂ comparison is not vacuous.
+fn ar1_chain(seed: u64, n: usize, shift: f64) -> Vec<f64> {
+    let mut rng = Rng::seed_from(seed);
+    let mut x = shift;
+    (0..n)
+        .map(|_| {
+            x = 0.9 * x + rng.normal();
+            x + shift
+        })
+        .collect()
+}
+
+/// Acceptance: the online split-R̂ agrees with the batch Gelman-Rubin
+/// over the same draws to 1e-9.
+#[test]
+fn online_rhat_matches_batch_gelman_rubin() {
+    let chains: Vec<Vec<f64>> =
+        (0..3).map(|c| ar1_chain(100 + c, 500, c as f64 * 0.1)).collect();
+    let mut online = OnlineRhat::new();
+    for (c, chain) in chains.iter().enumerate() {
+        for &x in chain {
+            online.push(c, x);
+        }
+    }
+    let batch = gelman_rubin(&chains);
+    let stream = online.rhat().expect("3 equal-length chains of 500");
+    assert!(
+        (stream - batch).abs() < 1e-9,
+        "online rhat {stream} != batch {batch}"
+    );
+}
+
+/// Acceptance: the windowed IAT agrees with the batch estimator on the
+/// same window to 1e-9 (it is the same Geyer sequence under the hood,
+/// so the agreement is in fact exact).
+#[test]
+fn windowed_iat_matches_batch_estimator() {
+    let values = ar1_chain(7, 300, 0.0);
+    let mut win = RingWindow::new(512);
+    for &x in &values {
+        win.push(x);
+    }
+    let batch = integrated_autocorr_time(&values);
+    let stream = windowed_iat(&win);
+    assert!(
+        (stream - batch).abs() < 1e-9,
+        "windowed iat {stream} != batch {batch}"
+    );
+    assert!(batch > 1.5, "AR(0.9) chain should have IAT well above 1, got {batch}");
+}
+
+fn async_workload() -> (psgld::data::sparse::Csr, NmfModel, RunConfig) {
+    let csr = movielens::movielens_like_dims(64, 80, 1600, 4, 21);
+    let model = NmfModel::poisson(4).with_priors(2.0, 2.0);
+    let run = RunConfig::quick(40).with_step(StepSchedule::Polynomial { a: 0.01, b: 0.51 });
+    (csr, model, run)
+}
+
+fn run_async(
+    csr: &psgld::data::sparse::Csr,
+    model: &NmfModel,
+    run: &RunConfig,
+    cfg: &AsyncClusterConfig,
+    plan: &FaultPlan,
+) {
+    psgld_distributed_async(
+        csr,
+        model,
+        4,
+        run,
+        4242,
+        &NetworkModel::paper_cluster(),
+        &ComputeModel::paper_node(),
+        cfg,
+        plan,
+        TieBreak::Fifo,
+        |_| 0.0,
+    )
+    .unwrap();
+}
+
+/// A fault-free async run must not trip the default rule set's
+/// non-finite / staleness-pinned / message-loss alerts.
+#[test]
+fn healthy_async_run_is_quiet() {
+    let _g = serial();
+    monitor_on();
+    let (csr, model, run) = async_workload();
+    let cfg = AsyncClusterConfig::default().with_checkpoint_every(10);
+    run_async(&csr, &model, &run, &cfg, &FaultPlan::empty());
+
+    let noisy = ["non_finite_value", "staleness_pinned", "msgs_dropped_ratio"];
+    for e in monitor::events() {
+        assert!(
+            !noisy.contains(&e.rule),
+            "healthy run raised {}: {}",
+            e.rule,
+            e.message
+        );
+    }
+    let snap = monitor::health_snapshot();
+    assert!(!snap.nodes.is_empty(), "async run fed no node gauges");
+    assert!(snap.nodes.iter().all(|n| n.execs > 0));
+    monitor_off();
+}
+
+/// Acceptance: a fault-injected run (8x straggler under a tight
+/// staleness bound) raises at least one staleness / stall alert, and
+/// the health JSONL round-trips through the crate JSON parser.
+#[test]
+fn faulty_async_run_raises_staleness_or_stall_alert() {
+    let _g = serial();
+    monitor_on();
+    // tighten the node rules: the smoke workload is small, so the
+    // defaults' min-exec floors would mask the injected fault
+    monitor::set_rules(vec![
+        AlertRule::StallTimeRatioAbove { ratio: 0.5, min_execs: 8, cooldown: 50 },
+        AlertRule::StalenessPinned { k: 4, cooldown: 50 },
+    ]);
+    let (csr, model, run) = async_workload();
+    let cfg = AsyncClusterConfig::default().with_tau(1).with_checkpoint_every(10);
+    let plan = FaultPlan {
+        stragglers: vec![StragglerRule { node: 0, from_t: 1, to_t: 30, factor: 8.0 }],
+        ..FaultPlan::empty()
+    };
+    run_async(&csr, &model, &run, &cfg, &plan);
+
+    let events = monitor::events();
+    assert!(
+        events
+            .iter()
+            .any(|e| e.rule == "staleness_pinned" || e.rule == "stall_time_ratio_above"),
+        "straggler run raised no staleness/stall alert; events: {:?}",
+        events.iter().map(|e| e.rule).collect::<Vec<_>>()
+    );
+
+    let dir = std::env::temp_dir().join("psgld_monitor_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("health.jsonl");
+    let n = monitor::write_health_jsonl(&path).unwrap();
+    assert_eq!(n, events.len());
+    let body = std::fs::read_to_string(&path).unwrap();
+    for line in body.lines() {
+        let j = Json::parse(line).unwrap();
+        assert!(j.field("rule").is_ok(), "health line missing rule: {line}");
+        assert_eq!(j.field("schema").unwrap().as_str().unwrap(), "psgld-health/1");
+    }
+    monitor_off();
+}
+
+/// The rendered exposition passes the OpenMetrics lint and carries the
+/// chain gauges the monitor was fed.
+#[test]
+fn exposition_renders_and_lints() {
+    let _g = serial();
+    monitor_on();
+    let mut rng = Rng::seed_from(9);
+    for t in 1..=50u64 {
+        monitor::observe_sample(t, t as f64 * 1e-3, rng.normal());
+    }
+    let text = render_openmetrics();
+    lint_openmetrics(&text).unwrap_or_else(|e| panic!("lint failed: {e}\n{text}"));
+    assert!(text.contains("pallas_health_samples_total{chain=\"0\"} 50"), "{text}");
+    assert!(text.ends_with("# EOF\n"));
+    monitor_off();
+}
+
+/// End-to-end scrape: the endpoint serves a lint-clean exposition with
+/// the OpenMetrics content type over plain HTTP/1.1.
+#[test]
+fn metrics_endpoint_serves_lint_clean_exposition() {
+    let _g = serial();
+    monitor_on();
+    monitor::with_chain(1, || {
+        for t in 1..=20u64 {
+            monitor::observe_sample(t, t as f64 * 1e-3, 1.0 + t as f64);
+        }
+    });
+    let server = MetricsServer::spawn("127.0.0.1:0").unwrap();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    drop(server);
+
+    assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+    assert!(resp.contains("application/openmetrics-text"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap_or_else(|| panic!("no body: {resp}"));
+    lint_openmetrics(body).unwrap_or_else(|e| panic!("scraped body fails lint: {e}\n{body}"));
+    assert!(body.contains("pallas_health_samples_total{chain=\"1\"} 20"), "{body}");
+    monitor_off();
+}
+
+/// The regression gate accepts an identical baseline and rejects a
+/// synthetically degraded current run.
+#[test]
+fn regression_gate_rejects_degraded_bench() {
+    let dir = std::env::temp_dir().join("psgld_monitor_itest_gate");
+    let base = dir.join("base");
+    let cur = dir.join("cur");
+    std::fs::create_dir_all(&base).unwrap();
+    std::fs::create_dir_all(&cur).unwrap();
+    let rows = |scale: f64| {
+        format!(
+            "[\n  {{\"name\":\"fig5/psgld_step\",\"ns_per_iter\":100.0,\
+             \"ops_per_s\":{:.2},\"unit\":\"grad-entries\",\"threads\":2}}\n]\n",
+            1e7 * scale
+        )
+    };
+    std::fs::write(base.join("BENCH_fig5.json"), rows(1.0)).unwrap();
+
+    std::fs::write(cur.join("BENCH_fig5.json"), rows(1.0)).unwrap();
+    let report = check_regression(&base, &cur, 0.2).unwrap();
+    assert!(report.passed(), "identical bench flagged: {:?}", report.regressions);
+    assert_eq!(report.compared, 1);
+
+    std::fs::write(cur.join("BENCH_fig5.json"), rows(0.1)).unwrap();
+    let report = check_regression(&base, &cur, 0.5).unwrap();
+    assert!(!report.passed(), "10x degradation not flagged");
+    assert_eq!(report.regressions.len(), 1);
+    assert_eq!(report.regressions[0].key, "fig5/psgld_step:ops_per_s");
+}
